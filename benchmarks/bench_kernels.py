@@ -1,0 +1,58 @@
+"""Kernel microbenchmarks (interpret-mode walltime on CPU is NOT a TPU
+number — these exist to track relative regressions and exercise the jit'd
+wrappers; the TPU performance story is the roofline analysis)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _bench(fn, *args, iters=5):
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def emit(printer=print):
+    printer("# kernel microbenches (name,us_per_call,derived)")
+    key = jax.random.key(0)
+
+    from repro.kernels.flash_attention.ops import flash_attention
+    q = jax.random.normal(key, (1, 4, 256, 64), jnp.float32)
+    k = jax.random.normal(key, (1, 2, 256, 64), jnp.float32)
+    dt = _bench(lambda a, b, c: flash_attention(a, b, c, bq=128, bk=128),
+                q, k, k)
+    flops = 4 * 1 * 4 * 256 * 256 * 64
+    printer(f"kernels/flash_attention_256,{dt*1e6:.0f},"
+            f"gflops_interpret={flops/dt/1e9:.2f}")
+
+    from repro.kernels.decode_attention.ops import decode_attention
+    qd = jax.random.normal(key, (2, 4, 1, 64))
+    kc = jax.random.normal(key, (2, 2, 256, 64))
+    dt = _bench(lambda a, b, c: decode_attention(a, b, c, 200), qd, kc, kc)
+    printer(f"kernels/decode_attention_256,{dt*1e6:.0f},ring=256")
+
+    from repro.kernels.rglru_scan.ops import rglru_scan
+    a = jax.nn.sigmoid(jax.random.normal(key, (2, 128, 256)))
+    b = jax.random.normal(key, (2, 128, 256))
+    h0 = jnp.zeros((2, 256))
+    dt = _bench(rglru_scan, a, b, h0)
+    printer(f"kernels/rglru_scan_128x256,{dt*1e6:.0f},")
+
+    from repro.kernels.rwkv6.ops import rwkv6
+    r = jax.random.normal(key, (1, 64, 2, 32))
+    lw = -jnp.exp(jax.random.normal(key, (1, 64, 2, 32)) * 0.5 - 1)
+    u = jax.random.normal(key, (2, 32)) * 0.1
+    dt = _bench(lambda *xs: rwkv6(*xs), r, r, r, lw, u)
+    printer(f"kernels/rwkv6_64,{dt*1e6:.0f},")
+
+    from repro.kernels.blur.ops import blur_block
+    blk = jax.random.uniform(key, (34, 258))
+    dt = _bench(lambda x: blur_block(x, "median"), blk)
+    printer(f"kernels/median_blur_block,{dt*1e6:.0f},rows=32;cols=256")

@@ -1,0 +1,39 @@
+"""Paper §6.3 headline numbers: the preemption overhead — throughput loss of
+preemptive vs non-preemptive scheduling, averaged over rates and sizes, for
+1 RR (paper: 1.66% +- 2.60%) and 2 RRs (paper: 4.04% +- 7.16%)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.bench_throughput import rows
+
+
+def overheads(sweep):
+    rws = rows(sweep)
+    out = {}
+    for rr in (1, 2):
+        deltas = []
+        for size in sorted({r["size"] for r in rws}):
+            for rate in ("busy", "medium", "idle"):
+                pre = [r for r in rws if r["rr"] == rr and r["size"] == size
+                       and r["rate"] == rate and r["preemptive"]]
+                nop = [r for r in rws if r["rr"] == rr and r["size"] == size
+                       and r["rate"] == rate and not r["preemptive"]]
+                if pre and nop and nop[0]["tput_mean"] > 0:
+                    loss = 1.0 - pre[0]["tput_mean"] / nop[0]["tput_mean"]
+                    deltas.append(loss)
+        out[rr] = {"mean_pct": float(np.mean(deltas) * 100),
+                   "std_pct": float(np.std(deltas) * 100),
+                   "max_pct": float(np.max(deltas) * 100),
+                   "n_cells": len(deltas)}
+    return out
+
+
+def emit(sweep, printer=print):
+    printer("# §6.3: preemption overhead (paper: 1.66% 1RR / 4.04% 2RR)")
+    ov = overheads(sweep)
+    for rr, o in ov.items():
+        printer(f"overhead/preemption_rr{rr},{o['mean_pct']*1e4:.0f},"
+                f"mean_pct={o['mean_pct']:.2f};std_pct={o['std_pct']:.2f};"
+                f"max_pct={o['max_pct']:.2f};paper_pct="
+                f"{1.66 if rr == 1 else 4.04}")

@@ -1,0 +1,54 @@
+"""Paper §6.3: partial (0.07 s) vs full (0.22 s) reconfiguration.
+
+Our analogues, measured directly on the reconfiguration engine:
+  - partial/cold    = generating a bitstream (XLA compile of the kernel)
+  - partial/cached  = loading an existing partial bitstream (cache hit)
+  - full            = tearing down every region + reloading
+The ratio cached/full mirrors the paper's 0.07/0.22 regime when the
+simulated bitstream-load times are enabled (the scheduler benches use them).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.controller.kernels import get_kernel
+from repro.core.reconfig import ReconfigEngine
+from repro.kernels.blur.tasks import make_image
+
+
+def measure(sizes=(128, 256), printer=print):
+    printer("# §6.3: reconfiguration cost (name,us_per_call,derived)")
+    rng = np.random.default_rng(0)
+    eng = ReconfigEngine()
+    rows = []
+    for size in sizes:
+        for kname in ("MedianBlur", "GaussianBlur"):
+            kd = get_kernel(kname)
+            img = make_image(rng, size)
+            bundle = kd.bundle(img, np.zeros_like(img), H=size, W=size,
+                               iters=1)
+            t0 = time.perf_counter()
+            eng.load(kname, bundle, (1,))
+            cold = time.perf_counter() - t0
+            hits = []
+            for _ in range(5):
+                t0 = time.perf_counter()
+                eng.load(kname, bundle, (1,))
+                hits.append(time.perf_counter() - t0)
+            hit = float(np.median(hits))
+            printer(f"reconfig/cold_{kname}_{size},{cold*1e6:.0f},"
+                    f"compile_s={cold:.3f}")
+            printer(f"reconfig/cached_{kname}_{size},{hit*1e6:.0f},"
+                    f"hit_s={hit:.6f};speedup={cold/max(hit,1e-9):.0f}x")
+            rows.append((cold, hit))
+    # full reconfiguration with the paper's timing regime
+    eng2 = ReconfigEngine(simulate_partial_s=0.07, simulate_full_s=0.22)
+    t0 = time.perf_counter()
+    eng2.full_reconfigure()
+    full = time.perf_counter() - t0
+    printer(f"reconfig/full_simulated,{full*1e6:.0f},"
+            f"full_s={full:.3f};paper_partial_s=0.07;paper_full_s=0.22;"
+            f"ratio={full/0.07:.2f}")
+    return rows

@@ -1,0 +1,54 @@
+"""Paper Fig. 3: service time per priority queue, +-preemption, 1 vs 2 RRs,
+three arrival rates (largest size, 30 tasks)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def rows(sweep, size=256):
+    out = []
+    for rate in ("busy", "medium", "idle"):
+        for n_regions in (1, 2):
+            for preemption in (False, True):
+                cells = [r for r in sweep
+                         if r["cfg"]["size"] == size
+                         and r["cfg"]["rate"] == rate
+                         and r["cfg"]["n_regions"] == n_regions
+                         and r["cfg"]["preemption"] == preemption
+                         and not r["cfg"]["full_reconfig"]]
+                by_prio = {p: [] for p in range(5)}
+                for c in cells:
+                    for t in c["service_times"].values():
+                        if t["service_s"] is not None:
+                            by_prio[t["priority"]].append(t["service_s"])
+                for p in range(5):
+                    v = by_prio[p]
+                    out.append({
+                        "rate": rate, "rr": n_regions,
+                        "preemptive": preemption, "priority": p,
+                        "mean_service_s": float(np.mean(v)) if v else 0.0,
+                        "std_service_s": float(np.std(v)) if v else 0.0,
+                        "n": len(v),
+                    })
+    return out
+
+
+def emit(sweep, printer=print):
+    printer("# Fig3: service time by priority "
+            "(name,us_per_call,derived)")
+    for r in rows(sweep):
+        name = (f"fig3/svc_{r['rate']}_rr{r['rr']}"
+                f"_{'pre' if r['preemptive'] else 'nopre'}_p{r['priority']}")
+        printer(f"{name},{r['mean_service_s']*1e6:.0f},"
+                f"std_us={r['std_service_s']*1e6:.0f};n={r['n']}")
+    # headline: urgent(p0/p1) mean with vs without preemption at busy rate
+    urgent_pre = [r for r in rows(sweep)
+                  if r["preemptive"] and r["priority"] <= 1
+                  and r["rate"] == "busy"]
+    urgent_nop = [r for r in rows(sweep)
+                  if not r["preemptive"] and r["priority"] <= 1
+                  and r["rate"] == "busy"]
+    mp = np.mean([r["mean_service_s"] for r in urgent_pre if r["n"]])
+    mn = np.mean([r["mean_service_s"] for r in urgent_nop if r["n"]])
+    printer(f"fig3/urgent_speedup_busy,{mp*1e6:.0f},"
+            f"nonpreemptive_us={mn*1e6:.0f};speedup={mn/max(mp,1e-9):.2f}x")

@@ -1,0 +1,54 @@
+"""Paper Fig. 4: throughput (tasks/s) vs size x arrival rate, +-preemption,
+1 and 2 RRs, plus the full-reconfiguration upper-bound comparison (red
+dashed lines in the paper)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def rows(sweep):
+    out = []
+    for size in sorted({r["cfg"]["size"] for r in sweep}):
+        for rate in ("busy", "medium", "idle"):
+            for n_regions in (1, 2):
+                for preemption in (False, True):
+                    cells = [r for r in sweep
+                             if r["cfg"]["size"] == size
+                             and r["cfg"]["rate"] == rate
+                             and r["cfg"]["n_regions"] == n_regions
+                             and r["cfg"]["preemption"] == preemption
+                             and not r["cfg"]["full_reconfig"]]
+                    if not cells:
+                        continue
+                    tput = [c["throughput_tps"] for c in cells]
+                    out.append({
+                        "size": size, "rate": rate, "rr": n_regions,
+                        "preemptive": preemption,
+                        "tput_mean": float(np.mean(tput)),
+                        "tput_std": float(np.std(tput)),
+                        "reconfigs": float(np.mean(
+                            [c["reconfigs"] for c in cells])),
+                    })
+    return out
+
+
+def full_reconfig_bound(row, partial_s=0.07, full_s=0.22):
+    """The paper's optimistic upper bound for full reconfiguration:
+    throughput_full <= n / (n/tput + n_reconf * (full - partial))."""
+    n = 30.0
+    t_part = n / max(row["tput_mean"], 1e-9)
+    t_full = t_part + row["reconfigs"] * (full_s - partial_s)
+    return n / t_full
+
+
+def emit(sweep, printer=print):
+    printer("# Fig4: throughput (name,us_per_call,derived) — us_per_call is "
+            "us per task")
+    for r in rows(sweep):
+        name = (f"fig4/tput_{r['size']}_{r['rate']}_rr{r['rr']}"
+                f"_{'pre' if r['preemptive'] else 'nopre'}")
+        us_per_task = 1e6 / max(r["tput_mean"], 1e-9)
+        bound = full_reconfig_bound(r)
+        printer(f"{name},{us_per_task:.0f},"
+                f"tps={r['tput_mean']:.3f};std={r['tput_std']:.3f};"
+                f"fullreconf_bound_tps={bound:.3f}")

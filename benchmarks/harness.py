@@ -1,0 +1,106 @@
+"""Shared scheduler-benchmark harness: the paper's experimental setup (§6)
+scaled to this container.
+
+Paper -> here:   image sizes 200..600 -> 128/256 px;  T in minutes -> seconds
+(busy 1.0 / medium 3.0 / idle 5.0);  30 tasks, 5 priorities, seed 15, both
+1 and 2 RRs, each cell repeated; the paper's measured bitstream-load times
+(partial 0.07 s) are injected so reconfiguration costs are comparable.
+
+One sweep collects every §6 metric (service time per priority, throughput,
+preemption overhead, reconfiguration counts); the bench_* modules format the
+paper's individual figures from the cached sweep.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.controller.kernels import get_kernel
+from repro.core.scheduler import Scheduler, SchedulerConfig
+from repro.core.shell import Shell
+from repro.core.task import generate_random_tasks
+from repro.kernels.blur.tasks import make_image
+
+KERNELS = ["MedianBlur", "MedianBlur2", "MedianBlur3", "GaussianBlur"]
+# paper: Median Blur over 1/2/3 iterations + 1 iteration of Gaussian Blur
+KERNEL_DEFS = {
+    "MedianBlur": ("MedianBlur", 1),
+    "MedianBlur2": ("MedianBlur", 2),
+    "MedianBlur3": ("MedianBlur", 3),
+    "GaussianBlur": ("GaussianBlur", 1),
+}
+RATES = {"busy": 1.0, "medium": 3.0, "idle": 5.0}  # T (seconds)
+SIZES = [128, 256]
+N_TASKS = 30
+SEED = 15
+PARTIAL_S = 0.07  # paper-measured partial reconfiguration time
+SLOWDOWN_S = 0.02  # per-chunk pause: scales task runtimes to the arrival rates
+
+
+def _arg_factory(size):
+    def f(rng, kname):
+        kernel, iters = KERNEL_DEFS[kname]
+        img = make_image(rng, size)
+        kd = get_kernel(kernel)
+        return kd.bundle(img, np.zeros_like(img), H=size, W=size, iters=iters)
+
+    return f
+
+
+def run_cell(*, size: int, rate: str, n_regions: int, preemption: bool,
+             seed: int = SEED, n_tasks: int = N_TASKS,
+             full_reconfig: bool = False, slowdown: float = SLOWDOWN_S,
+             chunk_budget: int = 2) -> dict:
+    rng = np.random.default_rng(seed)
+    tasks_raw = generate_random_tasks(
+        rng, KERNELS, n_tasks, RATES[rate], _arg_factory(size))
+    # map pseudo-kernels back to real registered kernels
+    for t in tasks_raw:
+        t.kernel = KERNEL_DEFS[t.kernel][0]
+    shell = Shell(n_regions=n_regions, chunk_budget=chunk_budget,
+                  simulate_partial_s=PARTIAL_S,
+                  simulate_full_s=0.22 if full_reconfig else 0.0)
+    for kname in ("MedianBlur", "GaussianBlur"):
+        shell.engine.prewarm(kname, tasks_raw[0].args,
+                             shell.regions[0].geometry)
+    for r in shell.regions:
+        r.slowdown_s = slowdown
+    sched = Scheduler(shell, SchedulerConfig(
+        preemption=preemption, full_reconfig_mode=full_reconfig))
+    t0 = time.perf_counter()
+    rep = sched.run(tasks_raw, quiet=True)
+    shell.shutdown()
+    rep["cfg"] = {"size": size, "rate": rate, "n_regions": n_regions,
+                  "preemption": preemption, "full_reconfig": full_reconfig,
+                  "seed": seed, "chunk_budget": chunk_budget}
+    rep["wall_total_s"] = time.perf_counter() - t0
+    rep["service_times"] = {
+        t.tid: {"priority": t.priority, "service_s": t.service_time,
+                "preemptions": t.n_preemptions}
+        for t in sched.finished}
+    return rep
+
+
+def full_sweep(repeats: int = 2, cache_path: str = "bench_sweep.json",
+               use_cache: bool = True) -> list:
+    if use_cache and os.path.exists(cache_path):
+        with open(cache_path) as f:
+            return json.load(f)
+    out = []
+    for rate in RATES:
+        for size in SIZES:
+            for n_regions in (1, 2):
+                for preemption in (False, True):
+                    for rep_i in range(repeats):
+                        r = run_cell(size=size, rate=rate,
+                                     n_regions=n_regions,
+                                     preemption=preemption,
+                                     seed=SEED + rep_i)
+                        out.append(r)
+    with open(cache_path, "w") as f:
+        json.dump(out, f)
+    return out

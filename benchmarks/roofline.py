@@ -1,0 +1,221 @@
+import os
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ must run before jax init: the roofline compiles on the production mesh.
+
+# Roofline extraction (EXPERIMENTS.md §Roofline).
+#
+# XLA cost_analysis counts a lax.scan body ONCE regardless of trip count, so
+# per-cell totals are reconstructed by two-point extrapolation over UNROLLED
+# 1-block and 2-block models:
+#     m(nb) = fixed + nb * per_block   =>   per_block = m(2) - m(1)
+#     total = fixed + effective_blocks * per_block
+# (effective_blocks = n_layers / len(block_pattern); fractional for
+# RecurrentGemma's 2-layer tail.)  Verified against a calibration matmul:
+# cost_analysis flops/bytes are PER-DEVICE after SPMD partitioning; the
+# collective-bytes parser is also per-device.
+#
+# Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+# ~50 GB/s/link ICI.  Terms (seconds, per the assignment's formulas):
+#     compute    = HLO_flops_per_dev / 197e12
+#     memory     = HLO_bytes_per_dev / 819e9
+#     collective = collective_bytes_per_dev / 50e9
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+import warnings
+
+warnings.filterwarnings("ignore")
+
+import jax  # noqa: E402
+
+from repro.configs import SHAPES, all_configs, get_config  # noqa: E402
+from repro.launch import hlo_analysis as H  # noqa: E402
+from repro.launch import specs as S  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_BYTES_INFLATION = None
+
+
+def bytes_inflation() -> float:
+    """cost_analysis 'bytes accessed' counts every op's operands on the
+    UNFUSED CPU module (layout copies, bf16->f32 normalization), inflating
+    true HBM traffic.  Calibrate the inflation once against a fully-sharded
+    bf16 matmul whose minimal traffic is known (operands + output, read
+    once / written once), and scale the memory term by it.  The raw value
+    is kept in the record."""
+    global _BYTES_INFLATION
+    if _BYTES_INFLATION is not None:
+        return _BYTES_INFLATION
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = make_production_mesh()
+    M = N = K = 8192
+    xs = jax.ShapeDtypeStruct((M, K), jnp.bfloat16)
+    ws = jax.ShapeDtypeStruct((K, N), jnp.bfloat16)
+    with mesh:
+        comp = jax.jit(
+            lambda x, w: x @ w,
+            in_shardings=(NamedSharding(mesh, P("data", None)),
+                          NamedSharding(mesh, P(None, "model"))),
+            out_shardings=NamedSharding(mesh, P("data", "model")),
+        ).lower(xs, ws).compile()
+    reported = float(comp.cost_analysis()["bytes accessed"])
+    expected = (M * K / 16 + K * N / 16 + M * N / 256) * 2.0  # per device
+    _BYTES_INFLATION = max(reported / expected, 1.0)
+    return _BYTES_INFLATION
+
+
+def _metrics(cfg, shape, mesh, *, unroll: bool, microbatches=1,
+             q_chunk=1024, sharding_mode="tp"):
+    args = S.input_specs(cfg, shape)
+    fn = S.step_fn(cfg, shape, mesh, remat="none" if unroll else "2level",
+                   q_chunk=q_chunk, microbatches=microbatches,
+                   unroll=unroll)
+    with mesh:
+        comp = jax.jit(
+            fn,
+            in_shardings=S.input_shardings(cfg, shape, mesh, args,
+                                           mode=sharding_mode),
+            out_shardings=S.output_shardings(cfg, shape, mesh, args,
+                                             mode=sharding_mode),
+        ).lower(*args).compile()
+    ca = comp.cost_analysis() or {}
+    colls = H.collective_bytes(comp.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll": colls.total_bytes,
+        "coll_by_op": dict(colls.by_op),
+    }
+
+
+def _nb_config(cfg, nb: int):
+    period = len(cfg.block_pattern)
+    kw = dict(name=f"{cfg.name}-nb{nb}", n_layers=nb * period)
+    if cfg.is_encdec:
+        kw["encoder_layers"] = nb  # n_enc == n_dec for whisper-tiny
+    return dataclasses.replace(cfg, **kw)
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D train (fwd+bwd), 2*N*D inference;
+    N = active params (MoE: top-k experts only)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # one decode step
+
+
+def cell_roofline(arch: str, shape_name: str, *, multi_pod=False,
+                  microbatches=1, q_chunk=1024, verbose=True,
+                  sharding_mode="tp", moe_mode="tp") -> dict:
+    from repro.models import moe as _moe
+    _moe.MOE_MODE = moe_mode
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "long_decode" and not cfg.subquadratic:
+        return {"arch": arch, "shape": shape_name, "status": "skipped"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    period = len(cfg.block_pattern)
+    eff_blocks = cfg.n_layers / period
+
+    t0 = time.time()
+    m1 = _metrics(_nb_config(cfg, 1), shape, mesh, unroll=True,
+                  microbatches=microbatches, q_chunk=q_chunk,
+                  sharding_mode=sharding_mode)
+    m2 = _metrics(_nb_config(cfg, 2), shape, mesh, unroll=True,
+                  microbatches=microbatches, q_chunk=q_chunk,
+                  sharding_mode=sharding_mode)
+    _moe.MOE_MODE = "tp"
+
+    def total(key):
+        delta = m2[key] - m1[key]
+        fixed = m1[key] - delta
+        return max(fixed + eff_blocks * delta, 0.0), delta, fixed
+
+    flops, flops_blk, flops_fix = total("flops")
+    byts, bytes_blk, _ = total("bytes")
+    coll, coll_blk, _ = total("coll")
+
+    infl = bytes_inflation()
+    t_compute = flops / PEAK_FLOPS
+    t_memory = byts / infl / HBM_BW  # fusion-corrected (see bytes_inflation)
+    t_coll = coll / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(cfg, shape)
+    hlo_global = flops * n_chips
+    useful = mf / hlo_global if hlo_global else 0.0
+    # roofline fraction: useful model flops per second at the bound, over peak
+    step_time = bound
+    mfu = (mf / n_chips / max(step_time, 1e-12)) / PEAK_FLOPS
+
+    rec = {
+        "arch": arch, "shape": shape_name, "status": "ok",
+        "sharding_mode": sharding_mode, "moe_mode": moe_mode,
+        "multi_pod": multi_pod, "n_chips": int(n_chips),
+        "per_device": {"flops": flops, "bytes_raw": byts,
+                       "bytes_corrected": byts / infl,
+                       "bytes_inflation_calib": round(infl, 2),
+                       "collective_bytes": coll},
+        "per_block": {"flops": flops_blk, "bytes": bytes_blk,
+                      "coll": coll_blk},
+        "terms_s": {k: round(v, 6) for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_flops_ratio": round(useful, 4),
+        "roofline_fraction": round(mfu, 4),
+        "coll_by_op_1blk": m2["coll_by_op"],
+        "extract_s": round(time.time() - t0, 1),
+    }
+    if verbose:
+        print(f"[roofline] {arch} x {shape_name}: "
+              f"compute {t_compute*1e3:.2f} ms | mem {t_memory*1e3:.2f} ms | "
+              f"coll {t_coll*1e3:.2f} ms -> {dominant.split('_')[0]} bound; "
+              f"useful={useful:.2f} frac={mfu:.3f}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default="roofline_all.json")
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else sorted(all_configs())
+    records = []
+    for a in archs:
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        for s in shapes:
+            try:
+                records.append(cell_roofline(a, s,
+                                             microbatches=args.microbatches))
+            except Exception as e:
+                traceback.print_exc()
+                records.append({"arch": a, "shape": s, "status": "FAIL",
+                                "error": str(e)[:300]})
+    ok = sum(r["status"] == "ok" for r in records)
+    print(f"[roofline] {ok} ok of {len(records)}")
+    with open(args.out, "w") as f:
+        json.dump(records, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

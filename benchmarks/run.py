@@ -1,0 +1,70 @@
+"""Benchmark orchestrator — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``name,us_per_call,derived`` CSV rows.  The scheduler sweep (paper §6)
+runs the full busy/medium/idle x size x RRs x preemption grid and caches to
+bench_sweep.json; roofline terms come from the dry-run artifacts (see
+benchmarks/roofline.py, run in its own process because it needs 512 virtual
+devices).
+"""
+from __future__ import annotations
+
+import argparse
+import warnings
+
+warnings.filterwarnings("ignore")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the full scheduler sweep if not cached")
+    ap.add_argument("--no-cache", action="store_true")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+
+    # kernel microbenches first (cheap)
+    from benchmarks import bench_kernels
+    bench_kernels.emit()
+
+    # reconfiguration costs (paper §6.3 partial-vs-full)
+    from benchmarks import bench_reconfig
+    bench_reconfig.measure()
+
+    # the paper's scheduler experiments
+    from benchmarks import bench_overhead, bench_service_time, bench_throughput
+    from benchmarks.harness import full_sweep
+    import os
+
+    if args.fast and not os.path.exists("bench_sweep.json"):
+        print("sweep/skipped,0,fast-mode")
+        return
+    sweep = full_sweep(repeats=2, use_cache=not args.no_cache)
+    bench_service_time.emit(sweep)
+    bench_throughput.emit(sweep)
+    bench_overhead.emit(sweep)
+
+    # roofline summary (if the extraction has been run)
+    import json
+    if os.path.exists("roofline_all.json"):
+        with open("roofline_all.json") as f:
+            rl = json.load(f)
+        print("# roofline terms per (arch x shape) — seconds per step")
+        for r in rl:
+            if r.get("status") != "ok":
+                continue
+            t = r["terms_s"]
+            print(f"roofline/{r['arch']}_{r['shape']},"
+                  f"{max(t.values())*1e6:.0f},"
+                  f"compute_ms={t['compute_s']*1e3:.3f};"
+                  f"mem_ms={t['memory_s']*1e3:.3f};"
+                  f"coll_ms={t['collective_s']*1e3:.3f};"
+                  f"dominant={r['dominant'].split('_')[0]};"
+                  f"useful={r['useful_flops_ratio']};"
+                  f"frac={r['roofline_fraction']}")
+
+
+if __name__ == "__main__":
+    main()

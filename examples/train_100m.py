@@ -1,0 +1,38 @@
+"""End-to-end driver: train a ~100M-param qwen3-family model for a few
+hundred steps on the synthetic pipeline, with async double-buffered
+checkpointing.  Kill it mid-run and start it again — it resumes from the
+last committed checkpoint (the paper's context-save/resume protocol at
+training scale).
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 200]
+"""
+import argparse
+import dataclasses
+
+from repro.configs import get_config
+from repro.launch.train import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt", default="/tmp/repro_100m/ck")
+    args = ap.parse_args()
+
+    # ~100M params: a narrow qwen3 (12 layers, d=512, vocab 8192).
+    base = get_config("qwen3-8b")
+    cfg = dataclasses.replace(
+        base, name="qwen3-100m", n_layers=12, d_model=512, n_heads=8,
+        n_kv_heads=4, d_ff=2048, vocab_size=8192, head_dim=64)
+    n = cfg.param_count() / 1e6
+    print(f"[train_100m] {cfg.name}: {n:.0f}M params")
+
+    state, losses = train_loop(cfg, steps=args.steps, batch=8, seq=256,
+                               ckpt_base=args.ckpt, ckpt_every=50,
+                               lr=6e-4)
+    if losses:
+        print(f"[train_100m] loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

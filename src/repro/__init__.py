@@ -1,0 +1,7 @@
+"""repro: preemptive scheduling on TPU meshes via partial reconfiguration.
+
+A JAX reproduction+extension of "Programming abstractions for preemptive
+scheduling in FPGAs using partial reconfiguration" (Rodriguez-Canal et al.,
+2022), adapted FPGA->TPU per DESIGN.md.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,140 @@
+"""Disk checkpointing: double-buffered atomic commits + async writer.
+
+The paper's ``valid`` flag becomes the POSIX idiom: write to a temp file,
+fsync, then atomically rename — a crash mid-save leaves the previous
+checkpoint intact.  ``AsyncCheckpointer`` runs commits on a writer thread so
+the training loop never blocks (checkpoint/restart is the first line of
+fault tolerance at pod scale).
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import threading
+import time
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_pytree(path: str, tree: Any, meta: Optional[dict] = None):
+    """Atomic pytree save: <path>.npz (+ sidecar .json), committed by rename."""
+    leaves, treedef = _flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(jax.device_get(x))
+              for i, x in enumerate(leaves)}
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)  # the atomic 'valid flag flip'
+    sidecar = {"treedef": str(treedef), "n_leaves": len(leaves),
+               "meta": meta or {}, "t": time.time()}
+    tmp2 = path + ".json.tmp"
+    with open(tmp2, "w") as f:
+        json.dump(sidecar, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp2, path + ".json")
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    """Load into the structure of ``like`` (shapes/dtypes validated)."""
+    with np.load(path) as z:
+        leaves = [z[f"leaf_{i}"] for i in range(len(z.files))]
+    ref_leaves, treedef = _flatten(like)
+    if len(leaves) != len(ref_leaves):
+        raise ValueError(f"checkpoint has {len(leaves)} leaves, "
+                         f"expected {len(ref_leaves)}")
+    return jax.tree.unflatten(treedef, leaves)
+
+
+class DoubleBufferedCheckpointer:
+    """Alternates between <base>.A and <base>.B; restore picks the newest
+    valid commit (the paper's two BRAM buffers + valid flag, on disk)."""
+
+    def __init__(self, base: str):
+        self.base = base
+        os.makedirs(os.path.dirname(base) or ".", exist_ok=True)
+        self._turn = 0
+
+    def _slot(self, i: int) -> str:
+        return f"{self.base}.{'AB'[i]}"
+
+    def save(self, tree: Any, meta: Optional[dict] = None) -> str:
+        path = self._slot(self._turn)
+        save_pytree(path, tree, meta)
+        self._turn = (self._turn + 1) % 2
+        return path
+
+    def restore(self, like: Any) -> Tuple[Optional[Any], Optional[dict]]:
+        best, best_t, best_meta = None, -1.0, None
+        for i in (0, 1):
+            p = self._slot(i)
+            if not (os.path.exists(p) and os.path.exists(p + ".json")):
+                continue
+            try:
+                with open(p + ".json") as f:
+                    sc = json.load(f)
+            except (json.JSONDecodeError, OSError):
+                continue  # torn sidecar: the other buffer stays valid
+            if sc["t"] > best_t:
+                best, best_t, best_meta = p, sc["t"], sc.get("meta")
+        if best is None:
+            return None, None
+        return load_pytree(best, like), best_meta
+
+
+class AsyncCheckpointer:
+    """Writer-thread wrapper: ``submit`` returns immediately; ``drain`` joins."""
+
+    def __init__(self, base: str):
+        self.db = DoubleBufferedCheckpointer(base)
+        self._q: "queue.Queue" = queue.Queue(maxsize=2)
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+        self.saves = 0
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            tree, meta = item
+            self.db.save(tree, meta)
+            self.saves += 1
+
+    def submit(self, tree: Any, meta: Optional[dict] = None):
+        # materialize on host first so the device buffers can be donated
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._q.put((host, meta))
+
+    def drain(self):
+        self._q.put(None)
+        self._thread.join(timeout=60)
+
+
+def save_scheduler_checkpoint(path: str, scheduler):
+    """Snapshot scheduler state: queued tasks + their saved contexts."""
+    state = {
+        "queued": [
+            {"tid": t.tid, "kernel": t.kernel, "priority": t.priority,
+             "arrival_time": t.arrival_time,
+             "n_preemptions": t.n_preemptions,
+             "has_context": t.saved_context is not None}
+            for q in scheduler.queues for t in q
+        ],
+        "finished": len(scheduler.finished),
+        "t": time.time(),
+    }
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(state, f)
+    os.replace(tmp, path)

@@ -1,0 +1,52 @@
+"""Uniform kernel ABI (paper §5.1).
+
+DPR requires every kernel loaded into an RR to present the *same* external
+interface; the paper pads the HLS signature with dummy arguments
+(``i_args_<n>``, unused float and pointer args).  Here the same role is
+played by ``ArgBundle``: a fixed number of buffer slots plus fixed-width
+int/float argument vectors, dummy-padded.  Every region worker therefore has
+ONE dispatch path — launching a different kernel never changes the host-side
+call structure, only the loaded executable ("bitstream").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+N_BUF_SLOTS = 4    # pointer args (HitTiles); unused slots hold (1,1) dummies
+N_INT_ARGS = 8     # the paper pads to 8 integer scalars
+N_FLOAT_ARGS = 8   # ... and 8 float scalars
+
+
+@dataclass
+class ArgBundle:
+    """Uniform argument record.  ``bufs`` are jax/np arrays (HitTile data);
+    ints/floats are padded to fixed width."""
+    bufs: Tuple[Any, ...] = ()
+    ints: Tuple[int, ...] = ()
+    floats: Tuple[float, ...] = ()
+
+    def padded(self):
+        bufs = list(self.bufs)[:N_BUF_SLOTS]
+        while len(bufs) < N_BUF_SLOTS:
+            bufs.append(np.zeros((1, 1), np.float32))  # dummy pointer arg
+        ints = list(self.ints)[:N_INT_ARGS]
+        ints += [0] * (N_INT_ARGS - len(ints))
+        floats = list(self.floats)[:N_FLOAT_ARGS]
+        floats += [0.0] * (N_FLOAT_ARGS - len(floats))
+        return (tuple(bufs), jnp.asarray(ints, jnp.int32),
+                jnp.asarray(floats, jnp.float32))
+
+    def signature(self) -> tuple:
+        """Shape/dtype signature — the 'interface' a region must be
+        configured for (kernel + signature = one executable)."""
+        bufs, ints, floats = self.padded()
+        return tuple((tuple(b.shape), jnp.asarray(b).dtype.name) for b in bufs)
+
+
+def abi_signature(bundle: ArgBundle) -> tuple:
+    return bundle.signature()

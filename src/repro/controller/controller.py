@@ -1,0 +1,57 @@
+"""Controller entity — the user-facing host API (paper §3).
+
+    shell = Shell(n_regions=2)
+    ctrl = Controller(shell)
+    t = ctrl.launch("MedianBlur", hittiles, H=600, W=600, iters=2, priority=1)
+    ctrl.run()          # scheduler main loop over submitted tasks
+    ctrl.wait(t)
+
+The Controller hides regions, reconfiguration and context book-keeping; the
+scheduler is the FCFS+priorities use case of §4.3 (swappable policy).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import List, Optional
+
+from repro.controller.abi import ArgBundle
+from repro.controller.kernels import get_kernel
+from repro.core.scheduler import Scheduler, SchedulerConfig
+from repro.core.shell import Shell
+from repro.core.task import Task, TaskStatus
+
+
+class Controller:
+    def __init__(self, shell: Shell, scheduler_config: SchedulerConfig = None):
+        self.shell = shell
+        self.scheduler = Scheduler(shell, scheduler_config)
+        self._submitted: List[Task] = []
+
+    def launch(self, kernel: str, hittiles=(), priority: int = 4,
+               arrival_time: float = 0.0, **scalars) -> Task:
+        """Enqueue a kernel-execution task (Controller model: tasks are
+        queued, the runtime resolves placement/transfers)."""
+        kd = get_kernel(kernel)
+        bufs = tuple(h.data if hasattr(h, "data") else h for h in hittiles)
+        bundle = kd.bundle(*bufs, **scalars)
+        task = Task(kernel=kernel, args=bundle, priority=priority,
+                    arrival_time=arrival_time)
+        self._submitted.append(task)
+        return task
+
+    def run(self, quiet: bool = True) -> dict:
+        """Run the scheduler over everything submitted so far."""
+        tasks, self._submitted = self._submitted, []
+        return self.scheduler.run(tasks, quiet=quiet)
+
+    def wait(self, task: Task, timeout: float = 60.0) -> Task:
+        t0 = time.perf_counter()
+        while task.status not in (TaskStatus.DONE, TaskStatus.FAILED):
+            if time.perf_counter() - t0 > timeout:
+                raise TimeoutError(task)
+            time.sleep(0.005)
+        return task
+
+    def shutdown(self):
+        self.shell.shutdown()

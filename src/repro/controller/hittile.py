@@ -1,0 +1,51 @@
+"""HitTile — the Controller model's multi-dimensional array wrapper [7].
+
+Non-scalar kernel arguments are HitTiles; the runtime moves them between
+host and device transparently (the Zynq zero-copy shared memory becomes an
+explicit device_put that is a no-op once resident).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+
+class HitTile:
+    def __init__(self, data, name: str = ""):
+        self._data = data
+        self.name = name
+
+    @classmethod
+    def zeros(cls, shape: Tuple[int, ...], dtype=np.float32, name: str = ""):
+        return cls(np.zeros(shape, dtype), name=name)
+
+    @classmethod
+    def of(cls, array, name: str = ""):
+        return cls(np.asarray(array), name=name)
+
+    @property
+    def shape(self):
+        return tuple(self._data.shape)
+
+    @property
+    def dtype(self):
+        return np.asarray(self._data).dtype
+
+    def device(self, device=None):
+        """Host->device transfer (idempotent)."""
+        self._data = jax.device_put(self._data, device)
+        return self._data
+
+    def host(self):
+        """Device->host transfer."""
+        self._data = np.asarray(jax.device_get(self._data))
+        return self._data
+
+    @property
+    def data(self):
+        return self._data
+
+    def __repr__(self):
+        return f"HitTile({self.name or 'anon'} {self.shape} {self.dtype})"

@@ -1,0 +1,75 @@
+"""Kernel registry — the ``CTRL_KERNEL_FUNCTION`` analogue (paper §5.1).
+
+    @ctrl_kernel(name="MedianBlur", backend="PYNQ",
+                 ktile_args=("input_array", "output_array"),
+                 int_args=("H", "W", "iters"))
+    def median_blur(ctx, bufs, ints, floats): ...
+
+registers a preemptible kernel with the uniform chunk ABI
+``(ContextRecord, bufs, i32[N_INT], f32[N_FLOAT]) -> (ContextRecord, bufs)``.
+The decorator records the *declared* argument names (for user-facing argument
+construction) while the generated callable always takes the padded uniform
+interface — the code-generation step of Listing 1.2.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Sequence
+
+from repro.controller.abi import ArgBundle
+
+
+@dataclass(frozen=True)
+class KernelDef:
+    name: str
+    backend: str
+    fn: Callable          # uniform chunk fn (ctx, bufs, ints, floats)
+    ktile_args: tuple
+    int_args: tuple
+    float_args: tuple
+    # per-chunk iteration budget default (preemption latency knob)
+    default_budget: int = 64
+
+    def bundle(self, *bufs, **scalars) -> ArgBundle:
+        """Build an ArgBundle from declared argument names."""
+        ints = tuple(int(scalars[k]) for k in self.int_args)
+        floats = tuple(float(scalars.get(k, 0.0)) for k in self.float_args)
+        return ArgBundle(bufs=tuple(bufs), ints=ints, floats=floats)
+
+
+_REGISTRY: Dict[str, KernelDef] = {}
+
+
+def ctrl_kernel(name: str, backend: str = "PYNQ",
+                ktile_args: Sequence[str] = (),
+                int_args: Sequence[str] = (),
+                float_args: Sequence[str] = (),
+                default_budget: int = 64):
+    def deco(fn):
+        kd = KernelDef(name=name, backend=backend, fn=fn,
+                       ktile_args=tuple(ktile_args), int_args=tuple(int_args),
+                       float_args=tuple(float_args),
+                       default_budget=default_budget)
+        _REGISTRY[name] = kd
+        return fn
+
+    return deco
+
+
+def get_kernel(name: str) -> KernelDef:
+    # importing the blur task kernels registers the paper's workload set
+    import repro.kernels.blur.tasks  # noqa: F401
+
+    if name not in _REGISTRY:
+        raise KeyError(f"kernel {name!r} not registered; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def kernel_names() -> list:
+    import repro.kernels.blur.tasks  # noqa: F401
+
+    return sorted(_REGISTRY)
+
+
+def register_kernel_def(kd: KernelDef):
+    _REGISTRY[kd.name] = kd

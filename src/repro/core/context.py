@@ -1,0 +1,160 @@
+"""Kernel context — the paper's ``struct context`` (Listing 1.3), verbatim
+fields, as a JAX pytree:
+
+    struct context { int var[N]; int init_var[N]; int incr_var[N];
+                     int saved[N]; int valid; }
+
+plus three runtime scalars: ``done`` (kernel finished), ``budget`` (chunk
+iteration budget — the cooperative-preemption analogue of the asynchronous
+RR reset, DESIGN.md §2.1) and ``intr`` (set when a ``for_save`` loop was cut
+short by the budget; lets enclosing loops distinguish "inner loop completed
+exactly at the budget boundary" from "inner loop interrupted" — without it
+the nested-loop resume can livelock).
+
+The device copy lives in a per-region HBM buffer (the BRAM bank analogue).
+``ContextBank`` keeps the host-side committed copy with the paper's
+``valid``-flag protocol realized as a double-buffered commit: a crash or
+preemption *during* a save leaves the previous buffer valid.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+N_CTX = 8  # compile-time N of the paper's prototype ("up to N integers")
+
+_FIELDS = ("var", "init_var", "incr_var", "saved", "valid", "done",
+           "budget", "intr")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class ContextRecord:
+    var: jax.Array        # i32[N_CTX]
+    init_var: jax.Array   # i32[N_CTX]
+    incr_var: jax.Array   # i32[N_CTX]
+    saved: jax.Array      # i32[N_CTX]
+    valid: jax.Array      # i32 scalar
+    done: jax.Array       # i32 scalar
+    budget: jax.Array     # i32 scalar — remaining iterations this chunk
+    intr: jax.Array       # i32 scalar — a loop was interrupted by the budget
+
+    def tree_flatten(self):
+        return (tuple(getattr(self, f) for f in _FIELDS), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+    def _replace(self, **kw) -> "ContextRecord":
+        return dataclasses.replace(self, **kw)
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def fresh(cls, budget: int = 0) -> "ContextRecord":
+        # NOTE: distinct buffers — the chunk executable donates the context,
+        # and XLA rejects donating one buffer for several arguments.
+        z = lambda: jnp.zeros((N_CTX,), jnp.int32)
+        return cls(var=z(), init_var=z(), incr_var=z(), saved=z(),
+                   valid=jnp.int32(1), done=jnp.int32(0),
+                   budget=jnp.int32(budget), intr=jnp.int32(0))
+
+    def with_budget(self, budget) -> "ContextRecord":
+        return self._replace(budget=jnp.asarray(budget, jnp.int32),
+                             intr=jnp.zeros((), jnp.int32))
+
+    # -- the paper's checkpoint()/context_vars() operations ----------------
+    def checkpoint(self, slot: int, value) -> "ContextRecord":
+        """checkpoint(var): store ``value`` into slot and mark it saved."""
+        return self._replace(
+            var=self.var.at[slot].set(jnp.asarray(value, jnp.int32)),
+            saved=self.saved.at[slot].set(1))
+
+    def declare(self, slot: int, init, incr) -> "ContextRecord":
+        """context_vars bookkeeping: remember loop init/increment."""
+        return self._replace(init_var=self.init_var.at[slot].set(init),
+                             incr_var=self.incr_var.at[slot].set(incr))
+
+    def resume_value(self, slot: int, start):
+        """Loop start: saved value if this slot was checkpointed, else start."""
+        return jnp.where(self.saved[slot] == 1, self.var[slot],
+                         jnp.asarray(start, jnp.int32))
+
+    def unsave(self, slot: int) -> "ContextRecord":
+        return self._replace(saved=self.saved.at[slot].set(0))
+
+    def clear(self, slot: int) -> "ContextRecord":
+        """Clear a slot after its loop completes (so re-entry restarts)."""
+        return self._replace(var=self.var.at[slot].set(0),
+                             saved=self.saved.at[slot].set(0))
+
+    def finish(self) -> "ContextRecord":
+        return self._replace(done=jnp.int32(1))
+
+    def dec_budget(self) -> "ContextRecord":
+        return self._replace(budget=self.budget - 1)
+
+    def clear_intr(self) -> "ContextRecord":
+        return self._replace(intr=jnp.zeros((), jnp.int32))
+
+    def mark_intr(self, flag) -> "ContextRecord":
+        return self._replace(intr=jnp.asarray(flag, jnp.int32))
+
+
+@dataclass
+class Committed:
+    """One committed (host-side) context snapshot."""
+    seqno: int
+    context: Any          # ContextRecord (host numpy copies)
+    payload: Any          # kernel state pytree (e.g. partial output buffers)
+
+
+class ContextBank:
+    """Per-region context storage — the BRAM bank + CPU-visible book-keeping.
+
+    Double-buffered commits realize the paper's ``valid`` flag: ``commit``
+    writes into the non-active buffer and only then flips the active index;
+    a preemption/crash mid-commit leaves the other buffer intact.  The
+    ``interrupt_next_commit`` hook lets tests inject exactly the torn-write
+    failure the paper's valid flag guards against.
+    """
+
+    def __init__(self):
+        self._buffers: list[Optional[Committed]] = [None, None]
+        self._active = -1  # no valid commit yet
+        self._seq = 0
+        self._lock = threading.Lock()
+        self.interrupt_next_commit = False  # test hook
+
+    def commit(self, context, payload=None) -> int:
+        with self._lock:
+            self._seq += 1
+            target = (self._active + 1) % 2
+            # device -> host materialization (the BRAM -> CPU copy)
+            host_ctx = jax.tree.map(lambda x: jax.device_get(x), context)
+            host_payload = (jax.tree.map(lambda x: x, payload)
+                            if payload is not None else None)
+            self._buffers[target] = Committed(self._seq, host_ctx, host_payload)
+            if self.interrupt_next_commit:
+                # simulate the asynchronous reset landing mid-save: the
+                # active index is NOT flipped -> previous commit stays valid
+                self.interrupt_next_commit = False
+                return self._active
+            self._active = target
+            return self._active
+
+    def restore(self) -> Optional[Committed]:
+        with self._lock:
+            if self._active < 0:
+                return None
+            return self._buffers[self._active]
+
+    def reset(self):
+        with self._lock:
+            self._buffers = [None, None]
+            self._active = -1

@@ -1,0 +1,95 @@
+"""Programmer abstractions for preemption (paper §5.2): ``for_save``,
+``checkpoint`` (on ContextRecord), and the chunked preemptible runner.
+
+A preemptible kernel is written as::
+
+    def kernel(ctx, state, ints, floats):
+        def body_k(ctx, k, state):
+            def body_row(ctx, row, state):
+                ... compute ...
+                ctx = ctx.checkpoint(SLOT_ROW, row)   # paper: checkpoint(row);
+                return ctx, state
+            ctx, state = for_save(ctx, SLOT_ROW, 0, H, 1, body_row, state)
+            ctx = ctx.checkpoint(SLOT_K, k)           # paper: checkpoint(k);
+            return ctx, state
+        ctx, state = for_save(ctx, SLOT_K, 0, iters, 1, body_k, state)
+        return ctx.finish(), state
+
+The kernel runs in bounded *chunks*: each dispatch gets ``ctx.budget``
+innermost iterations; when the budget hits 0 every enclosing ``for_save``
+exits, leaving the checkpointed slots as the resume point.  Preemption and
+stragglers are handled BETWEEN chunks by the region worker (DESIGN.md §2.1:
+the TPU-idiomatic replacement for the FPGA's asynchronous per-RR reset).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.context import ContextRecord
+
+
+def for_save(ctx: ContextRecord, slot: int, start, stop, step,
+             body: Callable, state: Any):
+    """Preemptible counted loop (paper's ``for_save`` macro).
+
+    ``body(ctx, i, state) -> (ctx, state)`` SHOULD call
+    ``ctx.checkpoint(slot, i)`` (by convention at iteration end) — exactly
+    like the paper, where what/when to checkpoint is the programmer's choice.
+    Resumes from the checkpointed slot if set; restarts cleanly otherwise.
+    """
+    ctx = ctx.declare(slot, start, step)
+    i0 = ctx.resume_value(slot, start)
+    ctx = ctx.unsave(slot)
+
+    def cond(carry):
+        c, i, _ = carry
+        return jnp.logical_and(jnp.logical_and(i < stop, c.budget > 0),
+                               c.intr == 0)
+
+    def loop(carry):
+        c, i, s = carry
+        c = c.clear_intr()
+        c, s = body(c, i, s)
+        # the iteration counts iff the body fully completed — i.e. no nested
+        # for_save inside it was interrupted by the budget.  An interrupted
+        # iteration resumes from its own checkpoints on the next chunk.
+        ok = c.intr == 0
+        c = c.dec_budget()
+        i2 = jnp.where(ok, i + step, i)
+        return (c, i2, s)
+
+    ctx, i_end, state = jax.lax.while_loop(cond, loop, (ctx, i0, state))
+    # completed normally -> clear the slot so a later re-entry restarts;
+    # interrupted -> keep the user's checkpoints, and tell enclosing loops.
+    completed = i_end >= stop
+    cleared = ctx.clear(slot)
+    ctx = jax.tree.map(lambda a, b: jnp.where(completed, a, b), cleared, ctx)
+    ctx = ctx.mark_intr(jnp.where(completed, 0, 1))
+    return ctx, state
+
+
+def make_chunk_fn(kernel_fn: Callable):
+    """Wrap a preemptible kernel into the uniform chunk entry point:
+
+        chunk(ctx, state, ints, floats) -> (ctx, state)
+
+    jit-able; the region worker re-dispatches it until ``ctx.done == 1``.
+    """
+    def chunk(ctx: ContextRecord, state, ints, floats):
+        return kernel_fn(ctx, state, ints, floats)
+
+    return chunk
+
+
+def run_to_completion(chunk_fn, ctx, state, ints, floats, budget: int,
+                      max_chunks: int = 100000):
+    """Host loop for tests: run chunks until done (no scheduler)."""
+    chunks = 0
+    while int(ctx.done) == 0 and chunks < max_chunks:
+        ctx = ctx.with_budget(budget)
+        ctx, state = chunk_fn(ctx, state, ints, floats)
+        chunks += 1
+    return ctx, state, chunks

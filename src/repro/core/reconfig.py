@@ -1,0 +1,112 @@
+"""Reconfiguration engine (paper §4.1/4.2).
+
+"Bitstreams" are compiled XLA executables keyed by (kernel, ABI signature,
+region geometry).  Partial reconfiguration = swapping one region's loaded
+executable (cache hit: fast; cold compile: the bitstream-generation cost).
+Full reconfiguration = tearing down every region and reloading (the paper's
+baseline, §6.3 red lines).  The single ICAP port becomes a global lock: at
+most one reconfiguration is in flight, and reconfiguration requests travel
+through the region queues as internal tasks exactly as in §4.2.
+
+Optional ``simulate_partial_s`` / ``simulate_full_s`` inject the paper's
+measured bitstream-load times (0.07 s / 0.22 s) so scheduler experiments can
+reproduce the paper's timing regime on CPU.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+
+from repro.controller.abi import ArgBundle
+from repro.controller.kernels import KernelDef, get_kernel
+from repro.core.context import ContextRecord
+
+
+@dataclass
+class ReconfigStats:
+    partial_loads: int = 0
+    cache_hits: int = 0
+    cold_compiles: int = 0
+    full_reconfigs: int = 0
+    total_partial_s: float = 0.0
+    total_compile_s: float = 0.0
+
+
+class ReconfigEngine:
+    def __init__(self, simulate_partial_s: float = 0.0,
+                 simulate_full_s: float = 0.0):
+        self._cache: Dict[tuple, Callable] = {}
+        self._icap = threading.Lock()  # single ICAP port
+        self.stats = ReconfigStats()
+        self.simulate_partial_s = simulate_partial_s
+        self.simulate_full_s = simulate_full_s
+        self._lock = threading.Lock()
+
+    def cache_key(self, kernel: str, sig: tuple, geometry: tuple) -> tuple:
+        return (kernel, sig, geometry)
+
+    def load(self, kernel_name: str, bundle: ArgBundle, geometry: tuple,
+             devices=None) -> Tuple[Callable, float]:
+        """Partial reconfiguration of one region.  Returns (executable,
+        seconds).  Serialized by the ICAP lock."""
+        kd = get_kernel(kernel_name)
+        key = self.cache_key(kernel_name, bundle.signature(), geometry)
+        with self._icap:  # only one RR reconfigures at a time
+            t0 = time.perf_counter()
+            fn = self._cache.get(key)
+            if fn is None:
+                fn = self._compile(kd, bundle, devices)
+                with self._lock:
+                    self._cache[key] = fn
+                    self.stats.cold_compiles += 1
+            else:
+                with self._lock:
+                    self.stats.cache_hits += 1
+            if self.simulate_partial_s:
+                time.sleep(self.simulate_partial_s)
+            dt = time.perf_counter() - t0
+            with self._lock:
+                self.stats.partial_loads += 1
+                self.stats.total_partial_s += dt
+            return fn, dt
+
+    def _compile(self, kd: KernelDef, bundle: ArgBundle, devices) -> Callable:
+        """AOT-compile the uniform chunk fn for this signature (the
+        bitstream-generation step)."""
+        t0 = time.perf_counter()
+        chunk = jax.jit(kd.fn, donate_argnums=(0, 1))
+        bufs, ints, floats = bundle.padded()
+        ctx = ContextRecord.fresh(budget=kd.default_budget)
+        abstract = lambda t: jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+        import jax.numpy as jnp
+
+        bufs_a = tuple(abstract(jnp.asarray(b)) for b in bufs)
+        compiled = chunk.lower(abstract(ctx), bufs_a, abstract(ints),
+                               abstract(floats)).compile()
+        with self._lock:
+            self.stats.total_compile_s += time.perf_counter() - t0
+        return compiled
+
+    def full_reconfigure(self) -> float:
+        """Account a full-FPGA reconfiguration (all regions stall)."""
+        t0 = time.perf_counter()
+        if self.simulate_full_s:
+            time.sleep(self.simulate_full_s)
+        with self._lock:
+            self.stats.full_reconfigs += 1
+        return time.perf_counter() - t0
+
+    def prewarm(self, kernel_name: str, bundle: ArgBundle, geometry: tuple):
+        """Generate the bitstream ahead of time (no ICAP involvement)."""
+        kd = get_kernel(kernel_name)
+        key = self.cache_key(kernel_name, bundle.signature(), geometry)
+        if key not in self._cache:
+            fn = self._compile(kd, bundle, None)
+            with self._lock:
+                self._cache[key] = fn
+                self.stats.cold_compiles += 1

@@ -1,0 +1,260 @@
+"""Reconfigurable Region (paper §4.1-4.2).
+
+Each region is treated as an independent accelerator: its own command queue
+and manager thread (the Controller queue-per-device structure), its own
+context bank (BRAM analogue), and a loaded executable ("bitstream").
+Reconfiguration requests are internal tasks in the same queue, scheduled
+before the associated kernel launch — exactly §4.2.
+
+Preemption is cooperative-chunked (DESIGN.md §2.1): the worker checks the
+preempt flag between chunks, saves the context+payload through the
+double-buffered bank, and raises a TASK_PREEMPTED interrupt.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.controller.kernels import get_kernel
+from repro.core.context import ContextBank, ContextRecord, Committed
+from repro.core.interrupts import Event, EventKind, InterruptController
+from repro.core.reconfig import ReconfigEngine
+from repro.core.task import Task, TaskStatus
+
+
+@dataclass
+class RegionStats:
+    chunks: int = 0
+    kernels_run: int = 0
+    reconfigs: int = 0
+    preemptions: int = 0
+    chunk_ewma_s: float = 0.0
+    busy_s: float = 0.0
+
+
+class Region:
+    def __init__(self, rid: int, engine: ReconfigEngine,
+                 interrupts: InterruptController,
+                 devices=None, geometry: Tuple[int, ...] = (1,),
+                 chunk_budget: Optional[int] = None):
+        self.rid = rid
+        self.engine = engine
+        self.interrupts = interrupts
+        self.devices = devices
+        self.geometry = geometry
+        self.chunk_budget = chunk_budget
+        self.bank = ContextBank()
+        self.loaded: Optional[tuple] = None  # (kernel, sig) "bitstream id"
+        self.executable = None
+        self.stats = RegionStats()
+        self.current_task: Optional[Task] = None
+
+        self._q: "queue.Queue[tuple]" = queue.Queue()
+        self._inflight = 0  # commands enqueued but not fully processed
+        self._inflight_lock = threading.Lock()
+        self._preempt = threading.Event()
+        self._failed = threading.Event()
+        self._stop = threading.Event()
+        self.slowdown_s: float = 0.0  # straggler-injection test hook
+        self._thread: Optional[threading.Thread] = None
+        self.start()
+
+    # ------------------------------------------------------------------
+    def start(self):
+        self._stop.clear()
+        self._failed.clear()
+        self._thread = threading.Thread(
+            target=self._run, name=f"region-{self.rid}", daemon=True)
+        self._thread.start()
+
+    def shutdown(self):
+        self._stop.set()
+        self._q.put(("noop", None))
+        if self._thread:
+            self._thread.join(timeout=5)
+
+    # -- commands (the per-region Controller queue) ---------------------
+    def _inc(self):
+        with self._inflight_lock:
+            self._inflight += 1
+
+    def _dec(self):
+        with self._inflight_lock:
+            self._inflight -= 1
+
+    def enqueue_reconfig(self, task: Task):
+        self._inc()
+        self._q.put(("reconfig", task))
+
+    def enqueue_launch(self, task: Task):
+        self._inc()
+        self._q.put(("launch", task))
+
+    def request_preempt(self):
+        self._preempt.set()
+
+    def cancel_preempt(self):
+        self._preempt.clear()
+
+    def inject_failure(self):
+        """Kill this region (node failure simulation)."""
+        self._failed.set()
+
+    def repair(self):
+        """Bring the region back (elastic grow).  Its bank survives."""
+        if self._thread and self._thread.is_alive():
+            return
+        self.loaded = None
+        self.executable = None
+        self.current_task = None
+        with self._inflight_lock:
+            self._inflight = 0
+        while not self._q.empty():
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self.start()
+
+    @property
+    def idle(self) -> bool:
+        # race-free: a command is 'in flight' from enqueue until the worker
+        # fully processed it (the scheduler's exit check must never observe
+        # a task in the dequeue->launch window as idle)
+        with self._inflight_lock:
+            return self._inflight == 0
+
+    @property
+    def alive(self) -> bool:
+        return (self._thread is not None and self._thread.is_alive()
+                and not self._failed.is_set())
+
+    # ------------------------------------------------------------------
+    def _run(self):
+        while not self._stop.is_set():
+            try:
+                cmd, task = self._q.get(timeout=0.2)
+            except queue.Empty:
+                continue
+            if cmd == "noop":
+                continue
+            try:
+                try:
+                    if cmd == "reconfig":
+                        self._do_reconfig(task)
+                    elif cmd == "launch":
+                        self._do_launch(task)
+                finally:
+                    self._dec()
+            except RegionFailure:
+                self.interrupts.raise_interrupt(Event(
+                    EventKind.REGION_FAILED, self.rid, task=task))
+                return  # thread dies; scheduler handles re-enqueue
+            except Exception as e:  # pragma: no cover - defensive
+                import traceback
+
+                traceback.print_exc()
+                task.status = TaskStatus.FAILED
+                self.current_task = None
+                self.interrupts.raise_interrupt(Event(
+                    EventKind.REGION_FAILED, self.rid, task=task, payload=e))
+                return
+
+    def _check_failure(self):
+        if self._failed.is_set():
+            raise RegionFailure()
+
+    def _do_reconfig(self, task: Task):
+        self._check_failure()
+        kd = get_kernel(task.kernel)
+        key = (task.kernel, task.args.signature(), self.geometry)
+        if self.loaded == key:
+            return
+        task.status = TaskStatus.RECONFIGURING
+        fn, dt = self.engine.load(task.kernel, task.args, self.geometry,
+                                  self.devices)
+        self.loaded = key
+        self.executable = fn
+        self.stats.reconfigs += 1
+        task.n_reconfigs += 1
+        self.interrupts.raise_interrupt(Event(
+            EventKind.RECONFIG_DONE, self.rid, task=task, payload=dt))
+
+    def _do_launch(self, task: Task):
+        self._check_failure()
+        kd = get_kernel(task.kernel)
+        budget = self.chunk_budget or kd.default_budget
+        bufs, ints, floats = task.args.padded()
+        bufs = tuple(jnp.asarray(b) for b in bufs)
+
+        if task.saved_context is not None:
+            # resume: copy the committed context (and partial outputs) back
+            saved: Committed = task.saved_context
+            ctx = jax.tree.map(jnp.asarray, saved.context)
+            if saved.payload is not None:
+                bufs = tuple(jnp.asarray(b) for b in saved.payload)
+            task.saved_context = None
+        else:
+            ctx = ContextRecord.fresh(budget=budget)
+
+        task.status = TaskStatus.RUNNING
+        task.region_history.append(self.rid)
+        if task.t_first_served is None:
+            task.t_first_served = time.perf_counter()
+        self.current_task = task
+        t_busy0 = time.perf_counter()
+
+        while True:
+            self._check_failure()
+            if self._preempt.is_set():
+                self._preempt.clear()
+                # save context + partial outputs through the bank (BRAM) and
+                # hand the committed copy back to the scheduler
+                self.bank.commit(ctx, payload=tuple(
+                    np.asarray(jax.device_get(b)) for b in bufs))
+                task.saved_context = self.bank.restore()
+                task.status = TaskStatus.PREEMPTED
+                task.n_preemptions += 1
+                self.stats.preemptions += 1
+                self.current_task = None
+                self.stats.busy_s += time.perf_counter() - t_busy0
+                self.interrupts.raise_interrupt(Event(
+                    EventKind.TASK_PREEMPTED, self.rid, task=task))
+                return
+
+            t0 = time.perf_counter()
+            ctx = ctx.with_budget(budget)
+            ctx, bufs = self.executable(ctx, bufs, ints, floats)
+            done = int(ctx.done)  # blocks until the chunk is ready
+            dt = time.perf_counter() - t0
+            if self.slowdown_s:
+                time.sleep(self.slowdown_s)
+                dt += self.slowdown_s
+            a = 0.3
+            self.stats.chunk_ewma_s = (
+                dt if self.stats.chunks == 0
+                else a * dt + (1 - a) * self.stats.chunk_ewma_s)
+            self.stats.chunks += 1
+
+            if done:
+                task.status = TaskStatus.DONE
+                task.t_done = time.perf_counter()
+                task.result = tuple(np.asarray(jax.device_get(b))
+                                    for b in bufs[:2])
+                self.stats.kernels_run += 1
+                self.current_task = None
+                self.stats.busy_s += time.perf_counter() - t_busy0
+                self.interrupts.raise_interrupt(Event(
+                    EventKind.TASK_DONE, self.rid, task=task))
+                return
+
+
+class RegionFailure(Exception):
+    pass

@@ -1,0 +1,282 @@
+"""FCFS preemptive scheduler with priority queues — Algorithm 1 (paper §4.3),
+plus production extensions: straggler mitigation (chunk-latency EWMA ->
+preempt & migrate), elastic region failure/repair, and checkpoint/restart of
+the whole scheduler state (ckpt/).
+
+Serve steps (paper):
+  (1) find an available region;
+  (2) none: if preemption enabled, preempt a region running a strictly
+      lower-priority task (save context, re-enqueue);
+  (3) if the loaded kernel differs, enqueue a reconfiguration (internal task);
+  (4) launch; a previously stopped task has its context copied back first.
+"""
+from __future__ import annotations
+
+import bisect
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+from repro.core.interrupts import Event, EventKind
+from repro.core.region import Region
+from repro.core.shell import Shell
+from repro.core.task import N_PRIORITIES, Task, TaskStatus
+
+
+@dataclass
+class SchedulerConfig:
+    preemption: bool = True
+    n_priorities: int = N_PRIORITIES
+    # full-reconfiguration baseline (paper §6.3): any kernel swap stalls ALL
+    # regions and reloads the whole fabric.
+    full_reconfig_mode: bool = False
+    # straggler mitigation: preempt+migrate when a region's chunk EWMA
+    # exceeds straggler_factor x the median of busy regions (None = off).
+    straggler_factor: Optional[float] = None
+    # auto-repair failed regions after this many seconds (None = stay dead).
+    repair_after_s: Optional[float] = None
+    checkpoint_path: Optional[str] = None  # periodic scheduler checkpoints
+    checkpoint_every_s: float = 5.0
+
+
+class Scheduler:
+    def __init__(self, shell: Shell, config: SchedulerConfig = None):
+        self.shell = shell
+        self.cfg = config or SchedulerConfig()
+        self.queues: List[list] = [[] for _ in range(self.cfg.n_priorities)]
+        self.finished: List[Task] = []
+        self.failed: List[Task] = []
+        self.t0 = 0.0
+        self._preempt_pending = set()  # region ids with a preempt in flight
+        self._dead_since = {}
+        self._last_ckpt = 0.0
+        self.events_log: List[tuple] = []
+
+    # ------------------------------------------------------------------
+    def now(self) -> float:
+        return time.perf_counter() - self.t0
+
+    def _enqueue(self, task: Task):
+        task.status = TaskStatus.QUEUED
+        q = self.queues[task.priority]
+        # FCFS within a priority: keep sorted by arrival time
+        bisect.insort(q, task, key=lambda t: t.arrival_time)
+
+    # ------------------------------------------------------------------
+    def run(self, tasks_to_arrive: List[Task], quiet: bool = True) -> dict:
+        """Algorithm 1 main loop."""
+        pending = sorted(tasks_to_arrive, key=lambda t: t.arrival_time)
+        self.t0 = time.perf_counter()
+        n_total = len(pending)
+
+        while True:
+            # admit arrivals
+            now = self.now()
+            while pending and pending[0].arrival_time <= now:
+                t = pending.pop(0)
+                t.t_arrived = time.perf_counter()
+                self._enqueue(t)
+                if not quiet:
+                    print(f"[{now:7.3f}] arrive {t}")
+
+            if (not pending and not any(self.queues)
+                    and not self._any_running()):
+                break
+
+            if (not any(r.alive for r in self.shell.regions)
+                    and self.cfg.repair_after_s is None):
+                raise RuntimeError(
+                    "all regions failed and auto-repair is disabled; "
+                    f"{sum(len(q) for q in self.queues)} tasks stranded")
+
+            self._serve(quiet)
+            self._check_stragglers()
+            self._maybe_repair()
+            self._maybe_checkpoint()
+
+            timeout = (pending[0].arrival_time - self.now()) if pending else 0.5
+            ev = self.shell.interrupts.wait(max(1e-4, min(timeout, 0.5)))
+            if ev is not None:
+                self._handle(ev, quiet)
+
+        # consume events that raced with the exit condition (a worker clears
+        # current_task before its TASK_DONE interrupt is drained)
+        for ev in self.shell.interrupts.drain():
+            self._handle(ev, quiet)
+        return self.report()
+
+    # ------------------------------------------------------------------
+    def _any_running(self) -> bool:
+        return any(not r.idle for r in self.shell.regions if r.alive) or bool(
+            self._preempt_pending)
+
+    def _handle(self, ev: Event, quiet=True):
+        self.events_log.append((self.now(), ev.kind.value, ev.region_id,
+                                getattr(ev.task, "tid", None)))
+        if ev.kind == EventKind.TASK_DONE:
+            self.finished.append(ev.task)
+            if ev.region_id in self._preempt_pending:
+                # the victim finished before honouring the preempt: the
+                # request is stale — clear it or the region is leaked as
+                # 'preempting' forever (deadlock) and the flag would
+                # insta-preempt the next task launched there.
+                self._preempt_pending.discard(ev.region_id)
+                self.shell.regions[ev.region_id].cancel_preempt()
+            if not quiet:
+                print(f"[{self.now():7.3f}] done   {ev.task} on R{ev.region_id}")
+        elif ev.kind == EventKind.TASK_PREEMPTED:
+            self._preempt_pending.discard(ev.region_id)
+            self._enqueue(ev.task)  # paper: enqueue the stopped task
+            if not quiet:
+                print(f"[{self.now():7.3f}] preempt {ev.task} off R{ev.region_id}")
+        elif ev.kind == EventKind.REGION_FAILED:
+            region = self.shell.regions[ev.region_id]
+            self._preempt_pending.discard(ev.region_id)
+            self._dead_since[ev.region_id] = self.now()
+            task = ev.task
+            if task is not None and task.status != TaskStatus.DONE:
+                # elastic recovery: resume from the region bank's last
+                # committed context (survives the failure), else restart
+                committed = region.bank.restore()
+                task.saved_context = committed
+                task.n_migrations += 1
+                self._enqueue(task)
+            if not quiet:
+                print(f"[{self.now():7.3f}] REGION {ev.region_id} FAILED")
+        # RECONFIG_DONE / HEARTBEAT: accounting only
+
+    # ------------------------------------------------------------------
+    def _serve(self, quiet=True):
+        """Paper serve procedure, highest priority first, FCFS within."""
+        for prio in range(self.cfg.n_priorities):
+            q = self.queues[prio]
+            while q:
+                task = q[0]
+                region = self._find_idle_region()
+                if region is not None:
+                    q.pop(0)
+                    self._dispatch(region, task, quiet)
+                    continue
+                if self.cfg.preemption:
+                    victim = self._find_lower_priority_victim(prio)
+                    if victim is not None:
+                        self._preempt_pending.add(victim.rid)
+                        victim.request_preempt()
+                # nothing (more) to do at this priority now
+                break
+
+    def _find_idle_region(self) -> Optional[Region]:
+        for r in self.shell.regions:
+            if r.alive and r.idle and r.rid not in self._preempt_pending:
+                return r
+        return None
+
+    def _find_lower_priority_victim(self, prio: int) -> Optional[Region]:
+        """Region running a STRICTLY lower-priority task (highest numeric
+        value first = least urgent victim)."""
+        best, best_prio = None, prio
+        for r in self.shell.regions:
+            if not r.alive or r.rid in self._preempt_pending:
+                continue
+            t = r.current_task
+            if t is not None and t.priority > best_prio:
+                best, best_prio = r, t.priority
+        return best
+
+    def _dispatch(self, region: Region, task: Task, quiet=True):
+        key = (task.kernel, task.args.signature(), region.geometry)
+        if self.cfg.full_reconfig_mode:
+            if region.loaded != key:
+                self._full_reconfigure(key, quiet)
+                region.loaded = None  # force the (re)load below
+        if region.loaded != key:
+            region.enqueue_reconfig(task)
+        region.enqueue_launch(task)
+        if not quiet:
+            print(f"[{self.now():7.3f}] launch {task} -> R{region.rid}")
+
+    def _full_reconfigure(self, key, quiet=True):
+        """Traditional full reconfiguration: stall the whole fabric.  Every
+        running task is killed (non-preemptable baseline waits instead)."""
+        # wait for all regions to drain (the FPGA cannot be reconfigured
+        # while kernels run; this is exactly why full reconfig is slow)
+        while any(not r.idle for r in self.shell.regions if r.alive):
+            ev = self.shell.interrupts.wait(0.05)
+            if ev is not None:
+                self._handle(ev, quiet)
+        self.shell.engine.full_reconfigure()
+        for r in self.shell.regions:
+            r.loaded = None
+            r.executable = None
+
+    # ------------------------------------------------------------------
+    def _check_stragglers(self):
+        f = self.cfg.straggler_factor
+        if not f:
+            return
+        # baseline: every alive region with chunk history (idle regions
+        # keep their EWMA — the straggler must not escape detection just
+        # because its fast peers finished their tasks already)
+        candidates = [r for r in self.shell.regions
+                      if r.alive and r.stats.chunks >= 3]
+        if len(candidates) < 2:
+            return
+        busy = [r for r in candidates if r.current_task is not None]
+        lat = sorted(r.stats.chunk_ewma_s for r in candidates)
+        median = lat[(len(lat) - 1) // 2]  # lower-middle of all candidates
+        if median <= 0:
+            return
+        for r in busy:
+            if (r.stats.chunk_ewma_s > f * median
+                    and r.rid not in self._preempt_pending):
+                t = r.current_task
+                if t is not None:
+                    t.n_migrations += 1
+                    self._preempt_pending.add(r.rid)
+                    r.request_preempt()  # -> re-enqueued, served elsewhere
+
+    def _maybe_repair(self):
+        if self.cfg.repair_after_s is None:
+            return
+        for rid, t_dead in list(self._dead_since.items()):
+            if self.now() - t_dead >= self.cfg.repair_after_s:
+                self.shell.regions[rid].repair()
+                del self._dead_since[rid]
+
+    def _maybe_checkpoint(self):
+        if not self.cfg.checkpoint_path:
+            return
+        if self.now() - self._last_ckpt < self.cfg.checkpoint_every_s:
+            return
+        from repro.ckpt.store import save_scheduler_checkpoint
+
+        save_scheduler_checkpoint(self.cfg.checkpoint_path, self)
+        self._last_ckpt = self.now()
+
+    # ------------------------------------------------------------------
+    def report(self) -> dict:
+        tasks = self.finished
+        per_prio = {}
+        for p in range(self.cfg.n_priorities):
+            st = [t.service_time for t in tasks
+                  if t.priority == p and t.service_time is not None]
+            per_prio[p] = {
+                "n": len(st),
+                "mean_service_s": sum(st) / len(st) if st else 0.0,
+                "max_service_s": max(st) if st else 0.0,
+            }
+        span = max((t.t_done for t in tasks if t.t_done), default=self.t0)
+        wall = max(span - self.t0, 1e-9)
+        return {
+            "n_done": len(tasks),
+            "wall_s": wall,
+            "throughput_tps": len(tasks) / wall,
+            "service_by_priority": per_prio,
+            "preemptions": sum(t.n_preemptions for t in tasks),
+            "migrations": sum(t.n_migrations for t in tasks),
+            "reconfigs": self.shell.engine.stats.partial_loads,
+            "full_reconfigs": self.shell.engine.stats.full_reconfigs,
+            "cache_hits": self.shell.engine.stats.cache_hits,
+            "cold_compiles": self.shell.engine.stats.cold_compiles,
+        }

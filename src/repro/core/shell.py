@@ -1,0 +1,75 @@
+"""The shell (paper §4.1): the static infrastructure that owns the device
+grid, instantiates N reconfigurable regions, and provides global/per-region
+resets.
+
+On a real pod the shell slices the device grid into disjoint sub-meshes
+(``make_region_mesh``); on this CPU container regions may share the single
+CpuDevice (``allow_overlap=True``), time-multiplexed — DESIGN.md §2.1(5).
+The number of regions is the shell build parameter (the TCL script input).
+"""
+from __future__ import annotations
+
+import threading
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.interrupts import InterruptController
+from repro.core.reconfig import ReconfigEngine
+from repro.core.region import Region
+
+
+class Shell:
+    def __init__(self, n_regions: int = 2, devices=None,
+                 allow_overlap: bool = True,
+                 chunk_budget: Optional[int] = None,
+                 simulate_partial_s: float = 0.0,
+                 simulate_full_s: float = 0.0):
+        self.devices = list(devices if devices is not None else jax.devices())
+        self.interrupts = InterruptController()
+        self.engine = ReconfigEngine(simulate_partial_s=simulate_partial_s,
+                                     simulate_full_s=simulate_full_s)
+        self.regions: List[Region] = []
+
+        n_dev = len(self.devices)
+        if n_dev >= n_regions:
+            per = n_dev // n_regions
+            slices = [self.devices[i * per:(i + 1) * per]
+                      for i in range(n_regions)]
+        else:
+            if not allow_overlap:
+                raise ValueError(
+                    f"{n_regions} regions need >= {n_regions} devices "
+                    f"(have {n_dev}); pass allow_overlap=True to time-share")
+            slices = [self.devices for _ in range(n_regions)]
+
+        for rid in range(n_regions):
+            self.regions.append(Region(
+                rid, self.engine, self.interrupts,
+                devices=slices[rid], geometry=(len(slices[rid]),),
+                chunk_budget=chunk_budget))
+
+    # -- resets (paper: global reset + per-RR GPIO reset) -----------------
+    def global_reset(self):
+        """Stop everything, clear queues and banks (full-FPGA reset)."""
+        for r in self.regions:
+            r.shutdown()
+        for r in self.regions:
+            r.bank.reset()
+            r.loaded = None
+            r.executable = None
+            r.current_task = None
+            r.start()
+        self.interrupts.drain()
+
+    def region_reset(self, rid: int):
+        """Per-region reset: preempt whatever is running there."""
+        self.regions[rid].request_preempt()
+
+    def shutdown(self):
+        for r in self.regions:
+            r.shutdown()
+
+    def alive_regions(self) -> List[Region]:
+        return [r for r in self.regions if r.alive]

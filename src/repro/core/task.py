@@ -1,0 +1,89 @@
+"""Tasks and their lifecycle (paper §4.3).
+
+A Task is one request to run a registered kernel with given arguments at a
+given priority.  Tasks are pre-generated with random arrival times for the
+scheduler experiments (exactly the paper's evaluation harness), or submitted
+live through the Controller API.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Optional
+
+N_PRIORITIES = 5  # paper: "we choose to use 5 different priorities"
+
+
+class TaskStatus(Enum):
+    PENDING = "pending"      # generated, not yet arrived
+    QUEUED = "queued"        # in a priority queue
+    RECONFIGURING = "reconf"  # region being partially reconfigured for it
+    RUNNING = "running"
+    PREEMPTED = "preempted"  # context saved, waiting in queue again
+    DONE = "done"
+    FAILED = "failed"
+
+
+_ids = itertools.count()
+
+
+@dataclass
+class Task:
+    kernel: str                   # registered kernel name
+    args: Any                     # ArgBundle (uniform ABI)
+    priority: int = N_PRIORITIES - 1  # 0 = most urgent
+    arrival_time: float = 0.0     # seconds from scheduler start
+    tid: int = field(default_factory=lambda: next(_ids))
+    status: TaskStatus = TaskStatus.PENDING
+    # context of a preempted task (host-side committed copy)
+    saved_context: Any = None
+    # bookkeeping for the paper's metrics
+    t_arrived: Optional[float] = None
+    t_first_served: Optional[float] = None
+    t_done: Optional[float] = None
+    n_preemptions: int = 0
+    n_reconfigs: int = 0
+    n_migrations: int = 0
+    region_history: list = field(default_factory=list)
+
+    @property
+    def service_time(self) -> Optional[float]:
+        """Paper metric (i): arrival -> first execution start."""
+        if self.t_arrived is None or self.t_first_served is None:
+            return None
+        return self.t_first_served - self.t_arrived
+
+    @property
+    def turnaround(self) -> Optional[float]:
+        if self.t_arrived is None or self.t_done is None:
+            return None
+        return self.t_done - self.t_arrived
+
+    def __repr__(self):
+        return (f"Task(#{self.tid} {self.kernel} prio={self.priority} "
+                f"{self.status.value})")
+
+
+def generate_random_tasks(rng, kernels: list, n_tasks: int, rate_T: float,
+                          arg_factory, n_priorities: int = N_PRIORITIES
+                          ) -> list[Task]:
+    """Paper §4.3: pre-generate ``tasks_to_arrive`` ordered by random arrival
+    time ~ U(0, T), random priority, random kernel, random args.
+
+    ``rate_T`` is in seconds here (the paper uses minutes at its scale).
+    ``arg_factory(rng, kernel_name)`` builds the ArgBundle.
+    """
+    tasks = []
+    for _ in range(n_tasks):
+        k = kernels[int(rng.integers(len(kernels)))]
+        tasks.append(Task(
+            kernel=k,
+            args=arg_factory(rng, k),
+            priority=int(rng.integers(n_priorities)),
+            arrival_time=float(rng.uniform(0.0, rate_T)),
+        ))
+    tasks.sort(key=lambda t: t.arrival_time)
+    return tasks

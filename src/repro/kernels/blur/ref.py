@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the blur task kernels (zero boundary semantics:
+images carry a 1-pixel zero pad ring that is never written)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _shifts(img: jnp.ndarray):
+    """img: padded [H+2, W+2].  Returns the 9 interior-aligned shifts
+    [H, W] each."""
+    H = img.shape[0] - 2
+    W = img.shape[1] - 2
+    return [img[di:di + H, dj:dj + W]
+            for di in range(3) for dj in range(3)]
+
+
+def median_blur_ref(img: jnp.ndarray) -> jnp.ndarray:
+    """One 3x3 median-blur pass.  img: padded [H+2, W+2]; returns padded
+    [H+2, W+2] with the interior replaced and the zero ring preserved."""
+    s = jnp.stack(_shifts(img))  # [9, H, W]
+    med = jnp.median(s, axis=0)
+    return jnp.zeros_like(img).at[1:-1, 1:-1].set(med)
+
+
+def gaussian_blur_ref(img: jnp.ndarray) -> jnp.ndarray:
+    """One 3x3 gaussian pass (kernel [[1,2,1],[2,4,2],[1,2,1]]/16)."""
+    w = jnp.array([1., 2., 1., 2., 4., 2., 1., 2., 1.]) / 16.0
+    s = _shifts(img)
+    acc = sum(si * wi for si, wi in zip(s, w))
+    return jnp.zeros_like(img).at[1:-1, 1:-1].set(acc)
+
+
+def iterated_blur_ref(img: jnp.ndarray, iters: int, kind: str) -> jnp.ndarray:
+    fn = median_blur_ref if kind == "median" else gaussian_blur_ref
+    for _ in range(iters):
+        img = fn(img)
+    return img

@@ -1,0 +1,24 @@
+"""jit wrapper for the decode-attention kernel (head-dim padded to 128)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+
+
+@partial(jax.jit, static_argnames=("window", "bk", "interpret"))
+def decode_attention(q, k_cache, v_cache, pos, *, window: Optional[int] = None,
+                     bk: int = 128, interpret: bool = True):
+    hd = q.shape[-1]
+    pad = (-hd) % 128
+    scale = 1.0 / (hd ** 0.5)
+    if pad:
+        zp = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        q, k_cache, v_cache = zp(q), zp(k_cache), zp(v_cache)
+    o = decode_attention_pallas(q, k_cache, v_cache, pos, window=window,
+                                scale=scale, bk=bk, interpret=interpret)
+    return o[..., :hd]

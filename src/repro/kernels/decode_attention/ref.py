@@ -1,0 +1,19 @@
+"""Oracle for decode attention: the models/layers ring-buffer path."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers import decode_attention as _dec
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos, *, window=None):
+    """q: [B,H,1,hd]; caches [B,KV,S,hd] -> [B,H,1,hd].
+    (layers.decode_attention uses [B,S,KV,hd] layout; transpose around.)"""
+    B, H, _, hd = q.shape
+    KV = k_cache.shape[1]
+    g = H // KV
+    kx = jnp.repeat(k_cache, g, axis=1).transpose(0, 2, 1, 3)  # [B,S,H,hd]
+    vx = jnp.repeat(v_cache, g, axis=1).transpose(0, 2, 1, 3)
+    qq = q.transpose(0, 2, 1, 3)  # [B,1,H,hd]
+    o = _dec(qq, kx, vx, jnp.asarray(pos, jnp.int32), window=window)
+    return o.transpose(0, 2, 1, 3)

@@ -1,0 +1,29 @@
+"""jit wrapper for the flash-attention kernel: pads head_dim to 128 lanes
+(h2o-danube's hd=120), dispatches Pallas (interpret on CPU, compiled on TPU).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    bq: int = 128, bk: int = 128, interpret: bool = True):
+    """q: [B,H,T,hd]; k,v: [B,KV,S,hd] -> [B,H,T,hd]."""
+    hd = q.shape[-1]
+    pad = (-hd) % 128
+    scale = 1.0 / (hd ** 0.5)  # scale from the TRUE head dim
+    if pad:
+        zp = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        q, k, v = zp(q), zp(k), zp(v)
+    o = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                               scale=scale, bq=bq, bk=bk, interpret=interpret)
+    return o[..., :hd]

@@ -1,0 +1,36 @@
+"""Oracle for the flash-attention kernel: direct softmax attention in jnp
+(O(T^2) memory — small shapes only)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None,
+                  scale: Optional[float] = None):
+    """q: [B,H,T,hd]; k,v: [B,KV,S,hd] with H % KV == 0.  Returns [B,H,T,hd]."""
+    B, H, T, hd = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    g = H // KV
+    kx = jnp.repeat(k, g, axis=1)
+    vx = jnp.repeat(v, g, axis=1)
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) * scale
+    tq = jnp.arange(T)[:, None]
+    ts = jnp.arange(S)[None, :]
+    ok = jnp.ones((T, S), bool)
+    if causal:
+        ok &= ts <= tq + (S - T)  # queries are the LAST T positions of S
+    if window is not None:
+        ok &= (tq + (S - T)) - ts < window
+    s = jnp.where(ok, s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bhts,bhsd->bhtd", p, vx.astype(jnp.float32))
+    return o.astype(q.dtype)

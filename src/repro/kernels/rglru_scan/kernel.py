@@ -1,0 +1,56 @@
+"""RG-LRU linear-recurrence scan (Pallas): h_t = a_t * h_{t-1} + b_t.
+
+Grid: (B, L/bl) — each program owns a [T, bl] channel stripe (bl = 128
+lanes) and runs the time recurrence as a fori_loop carrying h [1, bl] in
+registers.  The recurrence is elementwise over channels, so the channel
+stripes are embarrassingly parallel (the TP sharding of the lru width maps
+onto the same axis).  Time-sequential by nature — the kernel's job is lane
+parallelism + keeping the stripe resident in VMEM ((T, 128) f32 tiles).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, o_ref, hn_ref, *, T, bl):
+    h = h0_ref[0].astype(jnp.float32)  # [bl]
+
+    def body(t, h):
+        a = a_ref[0, t, :].astype(jnp.float32)
+        b = b_ref[0, t, :].astype(jnp.float32)
+        h = a * h + b
+        o_ref[0, t, :] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, T, body, h)
+    hn_ref[0] = h.astype(hn_ref.dtype)
+
+
+def rglru_scan_pallas(a, b, h0, *, bl: int = 128, interpret: bool = True):
+    """a, b: [B, T, L] (decay, gated input); h0: [B, L] f32.
+    Returns (h_seq [B, T, L] f32, h_last [B, L] f32)."""
+    B, T, L = a.shape
+    assert L % bl == 0, (L, bl)
+    kern = partial(_rglru_kernel, T=T, bl=bl)
+    return pl.pallas_call(
+        kern,
+        grid=(B, L // bl),
+        in_specs=[
+            pl.BlockSpec((1, T, bl), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, T, bl), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, bl), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, T, bl), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, bl), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, L), jnp.float32),
+            jax.ShapeDtypeStruct((B, L), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, b, h0)

@@ -1,0 +1,21 @@
+"""jit wrapper: pads the channel dim to 128 lanes."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan.kernel import rglru_scan_pallas
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def rglru_scan(a, b, h0, interpret: bool = True):
+    B, T, L = a.shape
+    pad = (-L) % 128
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, 0), (0, pad)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, 0), (0, pad)))
+        h0 = jnp.pad(h0, ((0, 0), (0, pad)))
+    hs, hT = rglru_scan_pallas(a, b, h0, interpret=interpret)
+    return hs[..., :L], hT[..., :L]

@@ -1,0 +1,21 @@
+"""Oracle: straightforward lax.scan over time."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, b, h0):
+    """a, b: [B,T,L]; h0: [B,L].  Returns (h_seq [B,T,L] f32, h_last)."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    h0 = h0.astype(jnp.float32)
+
+    def step(h, ab):
+        ai, bi = ab
+        h = ai * h + bi
+        return h, h
+
+    hT, hs = jax.lax.scan(step, h0, (jnp.moveaxis(a, 1, 0),
+                                     jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1), hT

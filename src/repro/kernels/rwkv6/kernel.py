@@ -1,0 +1,66 @@
+"""RWKV-6 time-mix recurrence (Pallas).
+
+Grid: (B, H) — each program owns one head: state S [hd_k, hd_v] f32 lives
+in VMEM for the whole sequence; per step
+    o_t = r_t . (S + (u * k_t) v_t^T);   S = diag(w_t) S + k_t v_t^T
+hd = 64 -> S is a 64x64 f32 tile (16 KB), r/k/v/w stream as [T, hd] slabs.
+This is the *recurrent* form (exact); the chunked-parallel form used for
+training lives in models/rwkv.py and is allclose-tested against this.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rwkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, o_ref, sn_ref,
+                 *, T, hd):
+    u = u_ref[0].astype(jnp.float32)  # [hd]
+    s = s0_ref[0, 0].astype(jnp.float32)  # [hd, hd]
+
+    def body(t, s):
+        r = r_ref[0, 0, t, :].astype(jnp.float32)  # [hd]
+        k = k_ref[0, 0, t, :].astype(jnp.float32)
+        v = v_ref[0, 0, t, :].astype(jnp.float32)
+        w = jnp.exp(lw_ref[0, 0, t, :].astype(jnp.float32))  # decay in (0,1]
+        kv = k[:, None] * v[None, :]  # [hd_k, hd_v]
+        o = (r[:, None] * (s + u[:, None] * kv)).sum(axis=0)  # [hd_v]
+        o_ref[0, 0, t, :] = o.astype(o_ref.dtype)
+        return w[:, None] * s + kv
+
+    s = jax.lax.fori_loop(0, T, body, s)
+    sn_ref[0, 0] = s.astype(sn_ref.dtype)
+
+
+def rwkv6_pallas(r, k, v, logw, u, s0, *, interpret: bool = True):
+    """r,k,v,logw: [B,T,H,hd]; u: [H,hd]; s0: [B,H,hd,hd] f32.
+    Returns (o [B,T,H,hd] f32, s_last [B,H,hd,hd] f32)."""
+    B, T, H, hd = r.shape
+    tr = lambda t: t.transpose(0, 2, 1, 3)  # [B,H,T,hd]
+    r, k, v, logw = tr(r), tr(k), tr(v), tr(logw)
+    kern = partial(_rwkv_kernel, T=T, hd=hd)
+    o, sn = pl.pallas_call(
+        kern,
+        grid=(B, H),
+        in_specs=[
+            pl.BlockSpec((1, 1, T, hd), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, T, hd), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, T, hd), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, T, hd), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, hd), lambda b, h: (h, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, T, hd), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, hd, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(r, k, v, logw, u, s0)
+    return o.transpose(0, 2, 1, 3), sn

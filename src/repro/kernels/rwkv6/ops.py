@@ -1,0 +1,17 @@
+"""jit wrapper for the RWKV-6 kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6.kernel import rwkv6_pallas
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def rwkv6(r, k, v, logw, u, s0=None, interpret: bool = True):
+    B, T, H, hd = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    return rwkv6_pallas(r, k, v, logw, u, s0, interpret=interpret)

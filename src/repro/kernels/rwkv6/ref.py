@@ -1,0 +1,2 @@
+"""Oracle: the step-by-step scan from models/rwkv.py."""
+from repro.models.rwkv import rwkv_time_mix_scan as rwkv6_ref  # noqa: F401

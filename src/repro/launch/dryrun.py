@@ -1,0 +1,184 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+#   The 512 host devices exist ONLY for this dry-run entry point.
+
+# Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+# on the production meshes, print memory_analysis / cost_analysis, and record
+# the collective schedule for the roofline.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch dbrx-132b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out f.json]
+
+import argparse
+import json
+import time
+import traceback
+import warnings
+
+warnings.filterwarnings("ignore")
+
+import jax  # noqa: E402
+
+from repro.configs import SHAPES, all_configs, get_config  # noqa: E402
+from repro.launch import hlo_analysis as H  # noqa: E402
+from repro.launch import specs as S  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+# TPU v5e hardware model (per chip) — roofline constants.
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9  # per link; a 2-D torus gives ~4 usable links/chip
+HBM_BYTES = 16 * 2**30  # 16 GiB per chip
+
+
+def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+                verbose: bool = True, remat: str = "2level",
+                q_chunk: int = 1024, microbatches: int = None,
+                donate: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "long_decode" and not cfg.subquadratic:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped",
+                "reason": "full quadratic attention (DESIGN.md §4)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    args = S.input_specs(cfg, shape)
+    in_sh = S.input_shardings(cfg, shape, mesh, args)
+    out_sh = S.output_shardings(cfg, shape, mesh, args)
+    fn = S.step_fn(cfg, shape, mesh, remat=remat, q_chunk=q_chunk,
+                   microbatches=microbatches)
+    donate_argnums = ()
+    if donate:
+        donate_argnums = (0,) if shape.kind == "train" else (
+            (1,) if shape.is_decode else ())
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate_argnums)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    colls = H.collective_bytes(hlo)
+    f32_artifact = H.f32_normalization_bytes(hlo)
+
+    n_chips = mesh.devices.size
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    rec = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "status": "ok",
+        "fits_hbm": bool((mem.argument_size_in_bytes + mem.output_size_in_bytes
+                          + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+                         < HBM_BYTES),
+        "f32_normalization_artifact_bytes": int(f32_artifact),
+        # corrected estimate can never go below the live state itself
+        "per_device_corrected": int(max(
+            mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes - mem.alias_size_in_bytes - f32_artifact,
+            mem.argument_size_in_bytes + mem.output_size_in_bytes
+            - mem.alias_size_in_bytes)),
+        "fits_hbm_corrected": bool(max(
+            mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes - mem.alias_size_in_bytes - f32_artifact,
+            mem.argument_size_in_bytes + mem.output_size_in_bytes
+            - mem.alias_size_in_bytes) < HBM_BYTES),
+        "n_chips": int(n_chips),
+        "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+            "per_device_total": (mem.argument_size_in_bytes
+                                 + mem.output_size_in_bytes
+                                 + mem.temp_size_in_bytes
+                                 - mem.alias_size_in_bytes),
+        },
+        # NOTE: scan bodies are counted once by XLA cost analysis; the
+        # roofline extractor (benchmarks/roofline.py) corrects via unrolled
+        # two-point extrapolation.  These raw numbers document the dry-run.
+        "hlo_flops_raw": flops,
+        "hlo_bytes_raw": bytes_accessed,
+        "collectives": {
+            "per_device_bytes_raw": colls.total_bytes,
+            "by_op": colls.by_op,
+            "count": colls.count,
+        },
+        "schedule": H.summarize_collectives(hlo),
+    }
+    if verbose:
+        hbm = rec["memory"]["per_device_total"]
+        hbm_c = rec["per_device_corrected"]
+        print(f"[dryrun] {arch} x {shape_name} "
+              f"{'2-pod' if multi_pod else '1-pod'}: OK  "
+              f"compile={t_compile:.1f}s  per-device={hbm/1e9:.2f} GB raw / "
+              f"{hbm_c/1e9:.2f} GB bf16-corrected  "
+              f"(fits {HBM_BYTES/2**30:.0f} GiB HBM: {hbm_c < HBM_BYTES})")
+        print(f"  memory_analysis: {mem}")
+        print(f"  cost_analysis: flops={flops:.3e} bytes={bytes_accessed:.3e}")
+        for line in rec["schedule"][:8]:
+            print(f"  {line}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", type=str, default=None)
+    ap.add_argument("--remat", type=str, default="2level")
+    ap.add_argument("--microbatches", type=int, default=None)
+    args = ap.parse_args()
+
+    cells = []
+    archs = sorted(all_configs()) if (args.all or not args.arch) else [args.arch]
+    for a in archs:
+        cfg = get_config(a)
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        for s in shapes:
+            meshes = [False, True] if args.both_meshes else [args.multi_pod]
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    records = []
+    for a, s, mp in cells:
+        try:
+            records.append(dryrun_cell(a, s, multi_pod=mp,
+                                       remat=args.remat,
+                                       microbatches=args.microbatches))
+        except Exception as e:  # a failure here is a bug in the system
+            traceback.print_exc()
+            records.append({"arch": a, "shape": s, "multi_pod": mp,
+                            "status": "FAIL", "error": f"{type(e).__name__}: {e}"})
+    ok = sum(r["status"] == "ok" for r in records)
+    sk = sum(r["status"] == "skipped" for r in records)
+    fail = [r for r in records if r["status"] == "FAIL"]
+    print(f"\n[dryrun] {ok} ok / {sk} skipped / {len(fail)} FAILED "
+          f"of {len(records)} cells")
+    for r in fail:
+        print(f"  FAIL {r['arch']} x {r['shape']} "
+              f"{'2pod' if r['multi_pod'] else '1pod'}: {r['error']}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"[dryrun] wrote {args.out}")
+    return 1 if fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

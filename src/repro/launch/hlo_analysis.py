@@ -1,0 +1,173 @@
+"""Parse compiled HLO text for collective ops and estimate per-device
+communication bytes (the roofline collective term).
+
+cost_analysis() does not report collective bytes, so we sum the result-shape
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute in ``compiled.as_text()``, scaled by the standard ring
+algorithm factors.  NOTE: collectives inside while-loop bodies appear once in
+the HLO text; the roofline extractor corrects for layer trip counts via
+two-point extrapolation over *unrolled* 1- and 2-block models (see
+benchmarks/roofline.py).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?\S+\s*=\s*(?P<result>\([^)]*\)|\S+?)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z]+\d*)\[(?P<dims>[0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+
+def _shape_bytes(result: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(result):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        g = m.group(1).strip()
+        return len(g.split(",")) if g else 1
+    return 1
+
+
+@dataclass
+class CollectiveStats:
+    """Per-device estimated bytes moved over ICI, by op kind."""
+    by_op: dict = field(default_factory=dict)
+    count: int = 0
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.by_op.values()))
+
+    def add(self, op: str, nbytes: float):
+        self.by_op[op] = self.by_op.get(op, 0.0) + nbytes
+        self.count += 1
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Estimate per-device bytes moved by each collective (ring algorithms):
+
+    - all-reduce  result S           -> 2 (g-1)/g * S
+    - all-gather  result S (gathered)->   (g-1)/g * S
+    - reduce-scatter result S (shard)->   (g-1)   * S   (full = S*g)
+    - all-to-all  result S           ->   (g-1)/g * S
+    - collective-permute result S    ->             S
+    """
+    stats = CollectiveStats()
+    seen_start = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        op = m.group("op")
+        # avoid double counting async -start/-done pairs: skip -done lines
+        if "-done(" in line or re.search(r"(all-\w+|collective-permute)-done", line):
+            continue
+        size = _shape_bytes(m.group("result"))
+        g = _group_size(line)
+        if g <= 1 and op != "collective-permute":
+            continue
+        if op == "all-reduce":
+            nb = 2.0 * (g - 1) / g * size
+        elif op == "all-gather":
+            nb = (g - 1) / g * size
+        elif op == "reduce-scatter":
+            nb = float(g - 1) * size
+        elif op == "all-to-all":
+            nb = (g - 1) / g * size
+        else:  # collective-permute
+            nb = float(size)
+        stats.add(op, nb)
+    return stats
+
+
+def count_ops(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))
+
+
+def summarize_collectives(hlo_text: str, top: int = 12) -> list[str]:
+    """Human-readable collective schedule lines (op, shape, groupsize)."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m or "-done(" in line:
+            continue
+        size = _shape_bytes(m.group("result"))
+        g = _group_size(line)
+        out.append(f"{m.group('op'):20s} bytes={size:>14,d} group={g}")
+    # aggregate duplicates
+    from collections import Counter
+
+    c = Counter(out)
+    return [f"{k}   x{v}" for k, v in c.most_common(top)]
+
+
+# --------------------------------------------------------------------------
+# XLA:CPU float-normalization artifact accounting
+# --------------------------------------------------------------------------
+_DEF_RE = re.compile(r"%([\w.-]+) = ([a-z]+\d*)\[([0-9,]*)\]")
+_CONV_RE = re.compile(
+    r"%([\w.-]+) = f32\[([0-9,]*)\]\S*\s+"
+    r"(convert|copy|fusion)\(%([\w.-]+)\)(.*)")
+
+
+def f32_normalization_bytes(hlo_text: str, min_bytes: int = 64 << 20) -> int:
+    """Estimate bytes of f32 buffers that exist ONLY because XLA:CPU cannot
+    execute bf16 natively (FloatNormalization inserts bf16->f32 converts of
+    weights/loop carries, then LICM hoists whole-stack copies).  A TPU
+    compile executes bf16 directly, so these buffers are artifacts of doing
+    the dry-run on the host backend; the corrected per-device total
+    subtracts them (documented in EXPERIMENTS.md §Dry-run).
+    """
+    dtypes = {}
+    for m in _DEF_RE.finditer(hlo_text):
+        dtypes.setdefault(m.group(1), m.group(2))
+    total = 0
+    seen = set()
+    for m in _CONV_RE.finditer(hlo_text):
+        name, dims, op, operand, rest = m.groups()
+        if op == "fusion" and "convert" not in rest:
+            continue
+        if dtypes.get(operand) != "bf16":
+            continue
+        # one distinct source tensor -> one artifact buffer: buffer
+        # assignment reuses the converts' memory across uses, so summing
+        # every instruction would badly overcount the peak.
+        key = (dims, re.sub(r"[.\d]+$", "", operand))
+        if key in seen:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        if 4 * n >= min_bytes:
+            total += 4 * n
+            seen.add(key)
+    return total

@@ -1,0 +1,30 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state.  The dry-run entry
+point sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before*
+importing jax; nothing here does that globally.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; the multi-pod mesh adds a leading 2-pod axis.
+
+    Axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+    The "pod" axis extends data parallelism across the inter-pod (DCN/ICI)
+    boundary; gradient reduction crosses it exactly once per step.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_region_mesh(devices, axis_names=("data", "model")):
+    """Mesh for a scheduler *region* (sub-mesh of the pod).  ``devices`` is a
+    2-D numpy array of jax devices (the shell slices the pod's device grid)."""
+    from jax.sharding import Mesh
+
+    return Mesh(devices, axis_names)

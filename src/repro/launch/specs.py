@@ -1,0 +1,207 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input of every
+(arch x shape) cell, plus the matching NamedShardings — no device allocation.
+
+The uniform step signatures (the paper's interface-conformance requirement):
+    train:          step(state, batch)            -> (state, metrics)
+    prefill:        step(params, batch)           -> (cache, last_logits)
+    decode/serving: step(params, cache, token, rng) -> (token, cache)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm as LM
+from repro.models import transformer as TF
+from repro.optim import AdamWConfig
+from repro.sharding import rules as R
+
+PyTree = Any
+
+
+def cell_opt(cfg: ModelConfig) -> AdamWConfig:
+    """Optimizer config for a cell: bf16 m/v for the >=100B configs so the
+    fp32-Adam state fits a 16GB/chip pod (DESIGN.md §5)."""
+    if cfg.param_count() > 6e10:
+        return AdamWConfig(state_dtype="bfloat16")
+    return AdamWConfig()
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_structs(cfg: ModelConfig, shape: ShapeConfig,
+                  compute_dtype=jnp.bfloat16) -> dict:
+    """Abstract batch for train/prefill shapes."""
+    B, T = shape.global_batch, shape.seq_len
+    batch = {}
+    if cfg.frontend == "vision":
+        nf = cfg.n_frontend_tokens
+        batch["tokens"] = sds((B, T - nf), jnp.int32)
+        batch["labels"] = sds((B, T - nf), jnp.int32)
+        batch["frontend"] = sds((B, nf, cfg.d_model), compute_dtype)
+    elif cfg.frontend == "audio":
+        batch["tokens"] = sds((B, T), jnp.int32)
+        batch["labels"] = sds((B, T), jnp.int32)
+        batch["frontend"] = sds((B, cfg.encoder_seq, cfg.d_model),
+                                compute_dtype)
+    else:
+        batch["tokens"] = sds((B, T), jnp.int32)
+        batch["labels"] = sds((B, T), jnp.int32)
+    if shape.kind == "prefill":
+        batch.pop("labels")
+    return batch
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig,
+                   dtype=jnp.bfloat16) -> PyTree:
+    return jax.eval_shape(
+        lambda: TF.init_cache(cfg, shape.global_batch, shape.seq_len, dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *,
+                opt: Optional[AdamWConfig] = None,
+                param_dtype=jnp.bfloat16) -> tuple:
+    """Returns (args: tuple of abstract pytrees) for the cell's step fn."""
+    opt = opt or cell_opt(cfg)
+    if shape.kind == "train":
+        state = LM.abstract_train_state(cfg, opt, param_dtype)
+        return (state, batch_structs(cfg, shape))
+    params = TF.abstract_params(cfg, param_dtype)
+    if shape.kind == "prefill":
+        return (params, batch_structs(cfg, shape))
+    # decode / long_decode
+    cache = abstract_cache(cfg, shape, dtype=param_dtype)
+    token = sds((shape.global_batch, 1), jnp.int32)
+    rng = jax.eval_shape(lambda: jax.random.key(0))
+    return (params, cache, token, rng)
+
+
+def input_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh, args,
+                    mode: str = "tp") -> tuple:
+    """NamedSharding pytrees matching input_specs() output."""
+    n = lambda spec: NamedSharding(mesh, spec)
+    wrap = lambda tree: jax.tree.map(n, tree,
+                                     is_leaf=lambda x: isinstance(x, P))
+    if shape.kind == "train":
+        state, batch = args
+        if mode == "fsdp":
+            p_specs = R.param_specs(cfg, mesh, state["params"], mode="fsdp")
+            s_specs = {"params": p_specs, "master": p_specs, "m": p_specs,
+                       "v": p_specs, "step": P()}
+            b_specs = jax.tree.map(
+                lambda leaf: P(tuple(mesh.axis_names),
+                               *([None] * (len(leaf.shape) - 1))), batch)
+            return (wrap(s_specs), wrap(b_specs))
+        s_specs = R.train_state_specs(cfg, mesh, state)
+        b_specs = R.batch_specs(cfg, shape, mesh, batch)
+        return (wrap(s_specs), wrap(b_specs))
+    if shape.kind == "prefill":
+        params, batch = args
+        if mode == "fsdp":
+            return (wrap(R.param_specs(cfg, mesh, params, mode="fsdp")),
+                    wrap(jax.tree.map(
+                        lambda leaf: P(tuple(mesh.axis_names),
+                                       *([None] * (len(leaf.shape) - 1))),
+                        batch)))
+        return (wrap(R.param_specs(cfg, mesh, params)),
+                wrap(R.batch_specs(cfg, shape, mesh, batch)))
+    params, cache, token, rng = args
+    dp = R.data_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    tok_spec = P(dp if shape.global_batch % dp_size == 0 else None, None)
+    return (wrap(R.param_specs(cfg, mesh, params)),
+            wrap(R.cache_specs(cfg, mesh, cache)),
+            n(tok_spec), n(P()))
+
+
+def output_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh, args,
+                     mode: str = "tp"):
+    """out_shardings for the step fn (state/cache keep their input shardings;
+    small outputs replicated)."""
+    n = lambda spec: NamedSharding(mesh, spec)
+    wrap = lambda tree: jax.tree.map(n, tree,
+                                     is_leaf=lambda x: isinstance(x, P))
+    if shape.kind == "train":
+        state, _ = args
+        metrics = {"loss": n(P()), "aux": n(P()), "n_tokens": n(P())}
+        if mode == "fsdp":
+            p_specs = R.param_specs(cfg, mesh, state["params"], mode="fsdp")
+            s_specs = {"params": p_specs, "master": p_specs, "m": p_specs,
+                       "v": p_specs, "step": P()}
+            return (wrap(s_specs), metrics)
+        s_specs = R.train_state_specs(cfg, mesh, state)
+        return (wrap(s_specs), metrics)
+    if shape.kind == "prefill":
+        params, batch = args
+        cache = jax.eval_shape(
+            lambda: TF.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                  jnp.bfloat16))
+        dp = R.data_axes(mesh)
+        dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+        logit_spec = P(dp if shape.global_batch % dp_size == 0 else None,
+                       "model" if cfg.padded_vocab % mesh.shape["model"] == 0
+                       else None)
+        return (wrap(R.cache_specs(cfg, mesh, cache)), n(logit_spec))
+    params, cache, token, rng = args
+    dp = R.data_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    tok_spec = P(dp if shape.global_batch % dp_size == 0 else None, None)
+    return (n(tok_spec), wrap(R.cache_specs(cfg, mesh, cache)))
+
+
+def default_microbatches(cfg: ModelConfig, shape: ShapeConfig, mesh) -> int:
+    """Enough grad-accumulation that saved layer inputs fit HBM: aim for
+    ~1-2 sequences per data shard per microbatch on the big models."""
+    if shape.kind != "train":
+        return 1
+    dp = int(np.prod([mesh.shape[a] for a in R.data_axes(mesh)]))
+    b_loc = max(shape.global_batch // max(dp, 1), 1)
+    big = cfg.param_count() > 3e9
+    giant = cfg.param_count() > 5e9
+    target = 1 if giant else (2 if big else 8)  # seqs/shard/microbatch
+    mb = max(b_loc // target, 1)
+    while shape.global_batch % (mb * dp) and mb > 1:
+        mb -= 1
+    return mb
+
+
+def step_fn(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+            opt: Optional[AdamWConfig] = None, remat: str = "full",
+            q_chunk: int = 1024, microbatches: Optional[int] = None,
+            unroll: bool = False, moe_mode: str = "tp"):
+    """The jit-able step function for a cell."""
+    opt = opt or cell_opt(cfg)
+    if moe_mode != "tp":
+        from repro.models import moe as MOE  # noqa: F401  (EP hillclimb hook)
+    if shape.kind == "train":
+        if microbatches is None:
+            microbatches = default_microbatches(cfg, shape, mesh)
+        state = LM.abstract_train_state(cfg, opt)
+        acc_specs = jax.tree.map(
+            lambda spec, leaf: NamedSharding(mesh, spec),
+            R.train_state_specs(cfg, mesh, state)["m"], state["m"])
+        # >=100B models on a 16GB/chip pod: bf16 gradient accumulation
+        # (documented in DESIGN.md; fp32 everywhere else).
+        acc_dtype = jnp.bfloat16 if cfg.param_count() > 6e10 else jnp.float32
+        mb_sh = None
+        if microbatches > 1:
+            batch = batch_structs(cfg, shape)
+            b_specs = R.batch_specs(cfg, shape, mesh, batch)
+            mb_sh = jax.tree.map(
+                lambda spec: NamedSharding(mesh, P(None, *spec)),
+                b_specs, is_leaf=lambda x: isinstance(x, P))
+        return LM.make_train_step(cfg, opt, mesh=mesh, remat=remat,
+                                  q_chunk=q_chunk, microbatches=microbatches,
+                                  unroll=unroll, grad_acc_shardings=acc_specs,
+                                  acc_dtype=acc_dtype, mb_shardings=mb_sh)
+    if shape.kind == "prefill":
+        return LM.make_prefill_step(cfg, mesh=mesh, q_chunk=q_chunk,
+                                    unroll=unroll)
+    return LM.make_decode_step(cfg, mesh=mesh, unroll=unroll)

@@ -1,0 +1,198 @@
+"""Core transformer layers, pure JAX.
+
+Attention is written as an *online-softmax chunked* computation over query
+blocks ("flash attention at the XLA level"): activation memory is
+O(seq * chunk) instead of O(seq^2), which is what lets the 32k-prefill cells
+fit HBM in the dry-run.  The Pallas TPU kernel in ``repro.kernels.flash_attention``
+implements the same contraction with explicit VMEM tiling; this module is the
+lowering/oracle path and the default on CPU.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., T, H, hd]; positions: [..., T] int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = rope_freqs(2 * half, theta)  # [half]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., T, half]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half : 2 * half]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    if hd > 2 * half:  # odd head_dim tail (h2o-danube head_dim=120 is even; safety)
+        rot = jnp.concatenate([rot, x[..., 2 * half :]], axis=-1)
+    return rot.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Chunked flash attention (jnp)
+# --------------------------------------------------------------------------
+def _mask_bias(q_pos, k_pos, causal: bool, window: Optional[int]):
+    """Additive mask bias [*, qc, kc] given absolute positions."""
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = jnp.ones(diff.shape, dtype=bool)
+    if causal:
+        ok &= diff >= 0
+    if window is not None:
+        ok &= diff < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def attention(
+    q: jax.Array,  # [B, Tq, H, hd]
+    k: jax.Array,  # [B, Tk, KV, hd]
+    v: jax.Array,  # [B, Tk, KV, hd]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_positions: Optional[jax.Array] = None,  # [B, Tq]
+    k_positions: Optional[jax.Array] = None,  # [B, Tk]
+    kv_mask: Optional[jax.Array] = None,  # [B, Tk] bool, for padded caches
+    q_chunk: int = 1024,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Online-softmax attention with GQA (H % KV == 0).  Returns [B,Tq,H,hd]."""
+    B, Tq, H, hd = q.shape
+    _, Tk, KV, _ = k.shape
+    assert H % KV == 0, (H, KV)
+    groups = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(Tq, dtype=jnp.int32), (B, Tq))
+    if k_positions is None:
+        k_positions = jnp.broadcast_to(jnp.arange(Tk, dtype=jnp.int32), (B, Tk))
+
+    # [B, KV, G, T, hd] layout so a kv head serves its query group.
+    qg = q.reshape(B, Tq, KV, groups, hd).transpose(0, 2, 3, 1, 4)
+    kh = k.transpose(0, 2, 1, 3)  # [B, KV, Tk, hd]
+    vh = v.transpose(0, 2, 1, 3)
+
+    nchunks = -(-Tq // q_chunk)
+    pad = nchunks * q_chunk - Tq
+    if pad:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+        q_positions = jnp.pad(q_positions, ((0, 0), (0, pad)), constant_values=-1)
+    qg = qg.reshape(B, KV, groups, nchunks, q_chunk, hd)
+    qpos = q_positions.reshape(B, nchunks, q_chunk)
+
+    kv_bias = 0.0
+    if kv_mask is not None:
+        kv_bias = jnp.where(kv_mask, 0.0, NEG_INF)[:, None, None, None, :]
+
+    def one_chunk(ci):
+        qc = qg[:, :, :, ci]  # [B, KV, G, qc, hd]
+        qp = qpos[:, ci]  # [B, qc]
+        # bf16 operands + f32 accumulation: the MXU-native contraction — and
+        # it keeps XLA from hoisting an f32 copy of the whole K/V (the
+        # stacked KV cache would otherwise double in memory).
+        s = jnp.einsum("bkgqh,bkth->bkgqt", qc, kh,
+                       preferred_element_type=jnp.float32) * scale
+        bias = _mask_bias(qp, k_positions, causal, window)  # [B, qc, Tk]
+        s = s + bias[:, None, None, :, :] + kv_bias
+        m = jnp.max(s, axis=-1, keepdims=True)
+        m = jnp.maximum(m, -0.5 * jnp.float32(1e30))  # rows with no valid key
+        p = jnp.exp(s - m)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        o = jnp.einsum("bkgqt,bkth->bkgqh", p.astype(v.dtype), vh,
+                       preferred_element_type=jnp.float32)
+        return o / jnp.maximum(l, 1e-30)
+
+    if nchunks == 1:
+        out = one_chunk(0)[:, :, :, None]
+    else:
+        # checkpoint each chunk: backward recomputes scores/probs instead of
+        # saving them for every chunk (flash-attention backward semantics —
+        # without this, lax.map stores O(T^2) softmax residuals).
+        out = jax.lax.map(jax.checkpoint(one_chunk),
+                          jnp.arange(nchunks))  # [n, B, KV, G, qc, hd]
+        out = jnp.moveaxis(out, 0, 3)  # [B, KV, G, n, qc, hd]
+    out = out.reshape(B, KV, groups, nchunks * q_chunk, hd)[:, :, :, :Tq]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Tq, H, hd)
+    return out.astype(q.dtype)
+
+
+def ring_positions(pos: jax.Array, S: int) -> jax.Array:
+    """Absolute position held by each ring-buffer slot after ``pos`` writes.
+
+    Slots are filled sequentially at index ``t % S``; slot ``i`` therefore
+    holds absolute position ``pos-1 - ((pos-1 - i) mod S)`` (negative =>
+    never written).  ``pos``: scalar int32 count of tokens written so far.
+    """
+    i = jnp.arange(S, dtype=jnp.int32)
+    last = pos - 1
+    abs_i = last - jnp.mod(last - i, S)
+    return abs_i  # [S], < 0 where the slot was never written
+
+
+def decode_attention(
+    q: jax.Array,  # [B, 1, H, hd]
+    k_cache: jax.Array,  # [B, S, KV, hd]  (ring buffer)
+    v_cache: jax.Array,  # [B, S, KV, hd]
+    pos: jax.Array,  # scalar int32 — tokens written INCLUDING the current one
+    *,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Single-token attention against a ring-buffered KV cache.  The current
+    token's k/v must already be written; its absolute position is pos-1."""
+    B, S, KV, hd = k_cache.shape
+    k_pos = jnp.broadcast_to(ring_positions(pos, S), (B, S))
+    kv_mask = k_pos >= 0
+    q_position = jnp.broadcast_to(pos - 1, (B,))
+    return attention(
+        q, k_cache, v_cache,
+        causal=True, window=window,
+        q_positions=q_position[:, None].astype(jnp.int32),
+        k_positions=k_pos, kv_mask=kv_mask,
+        q_chunk=1, scale=scale,
+    )
+
+
+# --------------------------------------------------------------------------
+# FFN
+# --------------------------------------------------------------------------
+def swiglu(x: jax.Array, w1, w3, w2) -> jax.Array:
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def sq_relu_mlp(x: jax.Array, w1, w2) -> jax.Array:
+    """RWKV channel-mix style squared-ReLU MLP."""
+    h = jnp.square(jax.nn.relu(x @ w1))
+    return h @ w2

@@ -1,0 +1,184 @@
+"""LM heads: loss, train_step / prefill_step / decode_step factories.
+
+These are the *kernels* the preemptive scheduler loads into mesh regions:
+each factory returns a pure jit-able function with a uniform signature
+(state, batch) -> (state, metrics) so any architecture can occupy any region
+(the paper's interface-conformance requirement, §5.1).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as TF
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+PyTree = Any
+AUX_WEIGHT = 0.01
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array):
+    """logits [B,T,V] (padded vocab), labels [B,T] int32 (-1 = masked).
+    Returns (mean_loss, n_valid).
+
+    Vocab-parallel friendly: the label log-prob is a masked reduction over V
+    (iota compare) instead of take_along_axis, so a model-sharded vocab dim
+    needs only small [B,T] all-reduces — never an all-gather of the logits
+    (Megatron-style vocab-parallel CE, done by GSPMD from this form).
+    """
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, len(logits.shape) - 1)
+    picked = jnp.where(iota == labels[..., None], shifted, 0.0)
+    ll = jnp.sum(picked, axis=-1) + m[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (lse - ll) * mask
+    n = jnp.maximum(mask.sum(), 1.0)
+    return nll.sum() / n, n
+
+
+def init_train_state(key, cfg: ModelConfig, opt: AdamWConfig,
+                     param_dtype=jnp.bfloat16) -> PyTree:
+    params = TF.init_params(key, cfg, dtype=param_dtype)
+    master, m, v = adamw_init(params, opt)
+    return {"params": params, "master": master, "m": m, "v": v,
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(cfg: ModelConfig, opt: AdamWConfig,
+                         param_dtype=jnp.bfloat16) -> PyTree:
+    return jax.eval_shape(
+        lambda k: init_train_state(k, cfg, opt, param_dtype),
+        jax.random.key(0))
+
+
+def make_loss_fn(cfg: ModelConfig, mesh=None, remat: str = "full",
+                 q_chunk: int = 1024, unroll: bool = False):
+    def loss_fn(params, batch):
+        logits, _, aux = TF.forward(
+            params, batch["tokens"], cfg, mesh=mesh,
+            frontend_embeds=batch.get("frontend"),
+            remat=remat, q_chunk=q_chunk, unroll=unroll)
+        # vlm: image positions carry no labels; labels are text-aligned and
+        # padded on the left with -1 to the full sequence by the pipeline.
+        labels = batch["labels"]
+        if labels.shape[1] < logits.shape[1]:  # frontend tokens prepended
+            pad = logits.shape[1] - labels.shape[1]
+            labels = jnp.pad(labels, ((0, 0), (pad, 0)), constant_values=-1)
+        loss, n = cross_entropy(logits, labels)
+        total = loss + AUX_WEIGHT * aux
+        return total, {"loss": loss, "aux": aux, "n_tokens": n}
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig, mesh=None,
+                    remat: str = "full", microbatches: int = 1,
+                    q_chunk: int = 1024, grad_compression=None,
+                    unroll: bool = False, grad_acc_shardings=None,
+                    acc_dtype=jnp.float32, mb_shardings=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``microbatches`` > 1 scans gradient accumulation over the leading batch
+    split (activation memory / comm-overlap knob).  ``grad_acc_shardings``
+    (pytree of NamedSharding, typically the ZeRO-1 optimizer-state layout)
+    constrains the fp32 accumulator so XLA reduce-scatters each microbatch's
+    gradients instead of keeping a replicated fp32 copy (ZeRO-2 semantics).
+    ``grad_compression`` is an optional (compress, decompress) pair applied
+    to the accumulated gradient (see optim/compression.py).
+    """
+    loss_fn = make_loss_fn(cfg, mesh=mesh, remat=remat, q_chunk=q_chunk,
+                           unroll=unroll)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def constrain(tree):
+        if grad_acc_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            grad_acc_shardings)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatches == 1:
+            (_, metrics), grads = grad_fn(params, batch)
+            grads = constrain(
+                jax.tree.map(lambda g: g.astype(jnp.float32), grads))
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+            if mb_shardings is not None:
+                # pin the microbatch layout: batch stays data-sharded on the
+                # per-microbatch dim, NOT on the scan dim (GSPMD would
+                # otherwise sometimes shard the scan axis and replicate the
+                # batch within each step).
+                mb = jax.tree.map(jax.lax.with_sharding_constraint,
+                                  mb, mb_shardings)
+
+            def acc_body(acc, mbatch):
+                (_, metrics), grads = grad_fn(params, mbatch)
+                # reduce-scatter each microbatch's grads into the ZeRO layout
+                # as they are produced (ZeRO-2), before accumulating.
+                grads = constrain(
+                    jax.tree.map(lambda g: g.astype(acc_dtype), grads))
+                acc_g, acc_m = acc
+                acc_g = jax.tree.map(jnp.add, acc_g, grads)
+                acc_m = jax.tree.map(lambda a, m: a + m / microbatches,
+                                     acc_m, metrics)
+                return (acc_g, acc_m), None
+
+            zeros = constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params))
+            zero_m = {"loss": jnp.float32(0), "aux": jnp.float32(0),
+                      "n_tokens": jnp.float32(0)}
+            (grads, metrics), _ = jax.lax.scan(
+                acc_body, (zeros, zero_m), mb)
+            grads = jax.tree.map(
+                lambda g: g.astype(jnp.float32) / microbatches, grads)
+
+        if grad_compression is not None:
+            compress, decompress = grad_compression
+            grads = decompress(compress(grads))
+
+        new_params, new_master, new_m, new_v = adamw_update(
+            grads, state["params"], state["master"], state["m"], state["v"],
+            state["step"], opt)
+        new_state = {"params": new_params, "master": new_master,
+                     "m": new_m, "v": new_v, "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None, q_chunk: int = 1024,
+                      cache_dtype=jnp.bfloat16, unroll: bool = False):
+    """prefill(params, batch) -> (cache, last_logits)."""
+    def prefill(params, batch):
+        logits, cache, _ = TF.forward(
+            params, batch["tokens"], cfg, mesh=mesh,
+            frontend_embeds=batch.get("frontend"),
+            want_cache=True, remat="none", q_chunk=q_chunk, unroll=unroll,
+            last_only=True)
+        return cache, logits[:, -1, :]
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, mesh=None, greedy: bool = True,
+                     unroll: bool = False):
+    """serve_step(params, cache, token, rng) -> (next_token, cache)."""
+    def serve_step(params, cache, token, rng):
+        logits, cache = TF.decode_step(params, cache, token, cfg, mesh=mesh,
+                                       unroll=unroll)
+        logits = logits[:, 0, :cfg.vocab_size].astype(jnp.float32)
+        if greedy:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)
+        return nxt[:, None], cache
+    return serve_step

@@ -1,0 +1,319 @@
+"""Mixture-of-Experts FFN with gather-based (capacity) dispatch.
+
+Dispatch is *local per data shard* inside ``shard_map``: each data shard
+routes its own tokens with local capacity C = ceil(k * N_loc / E * cf).  This
+keeps routing collective-free; the only communication is the tensor-parallel
+``psum`` of the expert output over the model axis (identical to the dense-FFN
+TP reduce).  Gather-based dispatch keeps HLO FLOPs proportional to *active*
+parameters (2 * E*C * D * F per matmul), unlike one-hot einsum dispatch which
+is quadratic in token count — this matters for the roofline accounting.
+
+An expert-parallel (EP) variant using all-to-all lives in
+``moe_ep_ffn`` — used by the perf hillclimb (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MoEConfig
+
+
+def router_topk(x2d: jax.Array, router_w: jax.Array, moe: MoEConfig):
+    """x2d: [N, D] -> (topk_idx [N,k], topk_w [N,k], aux_loss scalar parts)."""
+    logits = (x2d.astype(jnp.float32)) @ router_w.astype(jnp.float32)  # [N, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_w, topk_idx = jax.lax.top_k(probs, moe.top_k)
+    topk_w = topk_w / jnp.maximum(topk_w.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux terms (local sums; caller psums over data).
+    me = jnp.sum(probs, axis=0)  # [E]  sum of router probs
+    ce = jnp.sum(
+        jax.nn.one_hot(topk_idx[:, 0], moe.n_experts, dtype=jnp.float32), axis=0
+    )  # [E] top-1 assignment counts
+    return topk_idx, topk_w, (me, ce, jnp.float32(x2d.shape[0]))
+
+
+def local_capacity(n_tokens: int, moe: MoEConfig) -> int:
+    c = int(math.ceil(moe.top_k * n_tokens / moe.n_experts * moe.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # pad to 8 for TPU-friendly shapes
+
+
+def dispatch_indices(topk_idx: jax.Array, E: int, C: int):
+    """Build gather/scatter indices for capacity-C dispatch.
+
+    Returns (slot_token [E*C] int32 token index feeding each expert slot,
+             slot_valid [E*C] bool,
+             dest [N, k] int32 destination slot per (token, choice) —
+             E*C means dropped).
+    """
+    N, k = topk_idx.shape
+    flat_e = topk_idx.reshape(-1)  # [N*k]
+    order = jnp.argsort(flat_e, stable=True)  # slots sorted by expert
+    sorted_e = flat_e[order]
+    # rank of each sorted slot within its expert group
+    pos = jnp.arange(N * k, dtype=jnp.int32)
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E, dtype=sorted_e.dtype),
+                                 side="left").astype(jnp.int32)
+    rank = pos - seg_start[sorted_e]
+    keep = rank < C
+    dest_sorted = jnp.where(keep, sorted_e.astype(jnp.int32) * C + rank,
+                            jnp.int32(E * C))
+    dest = jnp.zeros((N * k,), jnp.int32).at[order].set(dest_sorted)
+    token_of_flat = jnp.arange(N * k, dtype=jnp.int32) // k
+    slot_token = jnp.full((E * C + 1,), N, jnp.int32).at[dest].set(token_of_flat)
+    slot_valid = (slot_token[: E * C] < N)
+    return slot_token[: E * C], slot_valid, dest.reshape(N, k)
+
+
+TOKEN_CHUNK = 16384  # cap on tokens dispatched at once (VMEM/HBM bound)
+
+
+def moe_ffn_local(x: jax.Array, p: dict, moe: MoEConfig,
+                  model_axis: Optional[str] = None,
+                  data_axes: Optional[tuple] = None):
+    """MoE SwiGLU FFN on local tokens.  x: [B, T, D] (local shard).
+
+    ``p``: router [D,E], w1 [E,D,F], w3 [E,D,F], w2 [E,F,D] (F may be the
+    model-axis shard).  psum over ``model_axis`` if given (shard_map context).
+    Long sequences are dispatched in TOKEN_CHUNK scans so the [E, C, D]
+    gather buffers stay bounded (prefill_32k would otherwise need ~10 GB).
+    Returns (y [B,T,D], aux_loss scalar).
+    """
+    B, T, D = x.shape
+    N_all = B * T
+    if N_all > TOKEN_CHUNK and N_all % TOKEN_CHUNK == 0:
+        n = N_all // TOKEN_CHUNK
+        xc = x.reshape(n, TOKEN_CHUNK, 1, D)
+
+        def body(_, xi):
+            yi, auxi = _moe_dispatch_compute(xi.reshape(1, TOKEN_CHUNK, D),
+                                             p, moe, model_axis, data_axes)
+            return None, (yi, auxi)
+
+        _, (ys, auxs) = jax.lax.scan(body, None, xc)
+        return ys.reshape(B, T, D), jnp.mean(auxs)
+    return _moe_dispatch_compute(x, p, moe, model_axis, data_axes)
+
+
+def _moe_dispatch_compute(x: jax.Array, p: dict, moe: MoEConfig,
+                          model_axis: Optional[str] = None,
+                          data_axes: Optional[tuple] = None):
+    B, T, D = x.shape
+    E, k = moe.n_experts, moe.top_k
+    N = B * T
+    C = local_capacity(N, moe)
+    x2d = x.reshape(N, D)
+
+    topk_idx, topk_w, (me, ce, cnt) = router_topk(x2d, p["router"], moe)
+    slot_token, slot_valid, dest = dispatch_indices(topk_idx, E, C)
+
+    # Gather tokens into expert slots (dropped slots read a zero row).
+    x_pad = jnp.concatenate([x2d, jnp.zeros((1, D), x2d.dtype)], axis=0)
+    xe = x_pad[slot_token].reshape(E, C, D)
+
+    h = jnp.einsum("ecd,edf->ecf", xe, p["w1"])
+    g = jnp.einsum("ecd,edf->ecf", xe, p["w3"])
+    h = jax.nn.silu(h) * g
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w2"])  # partial over model shard of F
+
+    if model_axis is not None:
+        ye = jax.lax.psum(ye, model_axis)
+
+    # Combine back: y[token] += w * ye[slot]
+    ye_flat = jnp.concatenate(
+        [ye.reshape(E * C, D), jnp.zeros((1, D), ye.dtype)], axis=0)
+    contrib = ye_flat[dest.reshape(-1)].reshape(N, k, D)
+    y = jnp.sum(contrib * topk_w[..., None].astype(contrib.dtype), axis=1)
+
+    # Aux load-balance loss: E * mean(me_frac * ce_frac), global over data.
+    if data_axes:
+        me = jax.lax.psum(me, data_axes)
+        ce = jax.lax.psum(ce, data_axes)
+        cnt = jax.lax.psum(cnt, data_axes)
+    aux = E * jnp.sum((me / jnp.maximum(cnt, 1.0)) * (ce / jnp.maximum(cnt, 1.0)))
+    return y.reshape(B, T, D).astype(x.dtype), aux
+
+
+# "tp" (baseline): every shard computes all experts, d_ff TP over "model".
+# "ep_decode" (hillclimb, EXPERIMENTS.md §Perf): experts stationary —
+# E over "model", F over "data"; tokens replicated (decode batches are KB);
+# the per-layer FSDP weight all-gathers of the baseline disappear.
+MOE_MODE = "tp"
+
+
+def moe_ffn(x: jax.Array, p: dict, moe: MoEConfig, mesh=None):
+    """shard_map wrapper.  x: [B, T, D] with batch sharded over the data-like
+    axes and D replicated; expert weights sharded on F over "model"."""
+    if mesh is None or math.prod(mesh.shape.values()) == 1:
+        return moe_ffn_local(x, p, moe)
+    if (MOE_MODE == "ep_decode" and x.shape[1] == 1
+            and moe.n_experts % mesh.shape["model"] == 0):
+        return moe_ffn_decode_ep(x, p, moe, mesh)
+    axes = tuple(mesh.axis_names)
+    data_axes = tuple(a for a in axes if a != "model")
+    dp_size = math.prod(mesh.shape[a] for a in data_axes) if data_axes else 1
+    # batch-1 long-context decode: replicate over the data axes
+    bspec = data_axes if x.shape[0] % max(dp_size, 1) == 0 else None
+    xspec = P(bspec, None, None)
+    pspec = {
+        "router": P(None, None),
+        "w1": P(None, None, "model"),
+        "w3": P(None, None, "model"),
+        "w2": P(None, "model", None),
+    }
+    fn = partial(moe_ffn_local, moe=moe, model_axis="model", data_axes=data_axes)
+    y, aux = jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(xspec, pspec),
+        out_specs=(xspec, P()),
+        check_vma=False,
+    )(x, p)
+    return y, aux
+
+
+# --------------------------------------------------------------------------
+# Expert-parallel variant (hillclimb; see EXPERIMENTS.md §Perf)
+# --------------------------------------------------------------------------
+def moe_ep_ffn_local(x, p, moe: MoEConfig, model_axis: str, data_axes: tuple,
+                     n_ep: int):
+    """Experts sharded over the model axis (n_ep experts groups); tokens are
+    exchanged with all-to-all instead of every shard computing all experts.
+
+    Each model shard holds E/n_ep experts with FULL d_ff.  Token blocks are
+    all-to-all'd to their expert's shard and back.  Collective volume per
+    token: 2 * D * k * cf (vs psum's 2 * D per token for TP-MoE) but the
+    expert matmuls touch 1/n_ep of the weights per shard with no psum.
+    """
+    B, T, D = x.shape
+    E, k = moe.n_experts, moe.top_k
+    e_loc = E // n_ep
+    N = B * T
+    C = local_capacity(N, moe)
+    x2d = x.reshape(N, D)
+    topk_idx, topk_w, (me, ce, cnt) = router_topk(x2d, p["router"], moe)
+    slot_token, slot_valid, dest = dispatch_indices(topk_idx, E, C)
+    x_pad = jnp.concatenate([x2d, jnp.zeros((1, D), x2d.dtype)], axis=0)
+    xe = x_pad[slot_token].reshape(E, C, D)
+
+    # all-to-all: [E, C, D] -> concat over model shards [e_loc, n_ep*C, D]
+    xe = xe.reshape(n_ep, e_loc, C, D)
+    xr = jax.lax.all_to_all(xe, model_axis, split_axis=0, concat_axis=2,
+                            tiled=False)  # [e_loc, C*n_ep, D]-ish
+    xr = xr.reshape(e_loc, n_ep * C, D)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xr, p["w1"])) * jnp.einsum(
+        "ecd,edf->ecf", xr, p["w3"])
+    yr = jnp.einsum("ecf,efd->ecd", h, p["w2"])  # [e_loc, n_ep*C, D] full sum
+    yr = yr.reshape(e_loc, n_ep, C, D).transpose(1, 0, 2, 3)
+    ye = jax.lax.all_to_all(yr, model_axis, split_axis=0, concat_axis=0,
+                            tiled=True).reshape(E, C, D)
+
+    ye_flat = jnp.concatenate([ye.reshape(E * C, D),
+                               jnp.zeros((1, D), ye.dtype)], axis=0)
+    contrib = ye_flat[dest.reshape(-1)].reshape(N, k, D)
+    y = jnp.sum(contrib * topk_w[..., None].astype(contrib.dtype), axis=1)
+    if data_axes:
+        me = jax.lax.psum(me, data_axes)
+        ce = jax.lax.psum(ce, data_axes)
+        cnt = jax.lax.psum(cnt, data_axes)
+    aux = E * jnp.sum((me / jnp.maximum(cnt, 1.0)) * (ce / jnp.maximum(cnt, 1.0)))
+    return y.reshape(B, T, D).astype(x.dtype), aux
+
+
+def moe_ep_ffn(x, p, moe: MoEConfig, mesh):
+    """Expert-parallel MoE (requires E % model_axis == 0 or model_axis % E == 0)."""
+    axes = tuple(mesh.axis_names)
+    data_axes = tuple(a for a in axes if a != "model")
+    m = mesh.shape["model"]
+    n_ep = math.gcd(moe.n_experts, m)
+    if n_ep != m:
+        raise ValueError(
+            f"EP needs n_experts ({moe.n_experts}) divisible by model axis ({m})")
+    xspec = P(data_axes, None, None)
+    pspec = {
+        "router": P(None, None),
+        "w1": P("model", None, None),
+        "w3": P("model", None, None),
+        "w2": P("model", None, None),
+    }
+    fn = partial(moe_ep_ffn_local, moe=moe, model_axis="model",
+                 data_axes=data_axes, n_ep=n_ep)
+    return jax.shard_map(fn, mesh=mesh, in_specs=(xspec, pspec),
+                         out_specs=(xspec, P()), check_vma=False)(x, p)
+
+
+def init_moe_params(key, d_model: int, d_ff: int, moe: MoEConfig, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    E = moe.n_experts
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(d_ff)
+    return {
+        "router": jax.random.normal(k1, (d_model, E), jnp.float32) * 0.02,
+        "w1": (jax.random.normal(k2, (E, d_model, d_ff)) * s_in).astype(dtype),
+        "w3": (jax.random.normal(k3, (E, d_model, d_ff)) * s_in).astype(dtype),
+        "w2": (jax.random.normal(k4, (E, d_ff, d_model)) * s_out).astype(dtype),
+    }
+
+
+# --------------------------------------------------------------------------
+# Expert-parallel decode (hillclimb; see EXPERIMENTS.md §Perf)
+# --------------------------------------------------------------------------
+def _ep_decode_local(x, p, moe: MoEConfig, e_per_shard: int):
+    """Per-shard body: x replicated [B,1,D]; weights are this shard's
+    experts (E_loc over "model") x F-slice (over "data").  Comm per layer:
+    psum[C,D] over "data" (TP-within-expert) + psum[B,D] over "model"
+    (combine) — KBs instead of the baseline's per-layer weight gathers."""
+    B, T, D = x.shape
+    E, k = moe.n_experts, moe.top_k
+    N = B * T
+    C = local_capacity(N, moe)
+    x2d = x.reshape(N, D)
+    topk_idx, topk_w, (me, ce, cnt) = router_topk(x2d, p["router"], moe)
+    slot_token, slot_valid, dest = dispatch_indices(topk_idx, E, C)
+    x_pad = jnp.concatenate([x2d, jnp.zeros((1, D), x2d.dtype)], axis=0)
+    xe = x_pad[slot_token].reshape(E, C, D)  # identical on every shard
+
+    m_idx = jax.lax.axis_index("model")
+    xe_loc = jax.lax.dynamic_slice_in_dim(xe, m_idx * e_per_shard,
+                                          e_per_shard, axis=0)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe_loc, p["w1"])) \
+        * jnp.einsum("ecd,edf->ecf", xe_loc, p["w3"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w2"])  # partial over F ("data")
+    ye = jax.lax.psum(ye, "data")                # full expert output
+
+    # scatter this shard's experts back into the global slot table, then
+    # combine across expert columns
+    ye_all = jnp.zeros((E, C, D), ye.dtype)
+    ye_all = jax.lax.dynamic_update_slice_in_dim(ye_all, ye, m_idx
+                                                 * e_per_shard, axis=0)
+    ye_all = jax.lax.psum(ye_all, "model")
+    ye_flat = jnp.concatenate([ye_all.reshape(E * C, D),
+                               jnp.zeros((1, D), ye.dtype)], axis=0)
+    contrib = ye_flat[dest.reshape(-1)].reshape(N, k, D)
+    y = jnp.sum(contrib * topk_w[..., None].astype(contrib.dtype), axis=1)
+    aux = E * jnp.sum((me / jnp.maximum(cnt, 1.0))
+                      * (ce / jnp.maximum(cnt, 1.0)))
+    return y.reshape(B, T, D).astype(x.dtype), aux
+
+
+def moe_ffn_decode_ep(x, p, moe: MoEConfig, mesh):
+    m = mesh.shape["model"]
+    e_per_shard = moe.n_experts // m
+    axes = tuple(mesh.axis_names)
+    pspec = {
+        "router": P(*(None,) * 2),
+        "w1": P("model", None, "data"),
+        "w3": P("model", None, "data"),
+        "w2": P("model", "data", None),
+    }
+    fn = partial(_ep_decode_local, moe=moe, e_per_shard=e_per_shard)
+    return jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(*(None,) * 3), pspec),
+        out_specs=(P(*(None,) * 3), P()),
+        check_vma=False,
+    )(x, p)

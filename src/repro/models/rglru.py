@@ -1,0 +1,122 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+The recurrence  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)  is a
+per-channel linear recurrence -> computed with a *chunked associative scan*:
+``lax.scan`` over chunks carrying the boundary state, ``associative_scan``
+within a chunk.  This keeps activation memory O(T) while giving XLA a
+parallel inner form (and mirrors the Pallas kernel's block structure in
+``repro.kernels.rglru_scan``).
+
+Gates are per-channel affine (diagonal) rather than block-diagonal dense as
+in the paper's Griffin — noted in configs/recurrentgemma_9b.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+C_SCALE = 8.0  # Griffin's fixed temperature on the recurrence gate
+
+
+def _gates(c: jax.Array, p: dict):
+    """c: [..., L] conv output -> (log_a, gated_input)."""
+    r = jax.nn.sigmoid(c * p["gate_a_w"] + p["gate_a_b"])  # recurrence gate
+    i = jax.nn.sigmoid(c * p["gate_i_w"] + p["gate_i_b"])  # input gate
+    log_a = -C_SCALE * jax.nn.softplus(p["lambda"]) * r  # [..., L], <= 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * (i * c)
+
+
+def _assoc_scan_chunk(a: jax.Array, bx: jax.Array, h0: jax.Array):
+    """Within-chunk parallel prefix for h_t = a_t h_{t-1} + bx_t.
+    a, bx: [B, Cn, L]; h0: [B, L].  Returns (h: [B, Cn, L], h_last)."""
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+    aa, bb = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    h = bb + aa * h0[:, None, :]
+    return h, h[:, -1, :]
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array,
+                  state: Optional[jax.Array] = None):
+    """x: [B, T, L], w: [W, L] depthwise.  state: [B, W-1, L] carried inputs.
+    Returns (y [B,T,L], new_state [B, W-1, L])."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)  # [B, T+W-1, L]
+    y = sum(xx[:, i : i + x.shape[1], :] * w[i] for i in range(W))
+    new_state = xx[:, -(W - 1):, :] if W > 1 else state
+    return y.astype(x.dtype), new_state
+
+
+def rglru_apply(
+    x: jax.Array,  # [B, T, D] (post-norm input)
+    p: dict,
+    *,
+    h0: Optional[jax.Array] = None,  # [B, L]
+    conv_state: Optional[jax.Array] = None,  # [B, W-1, L]
+    chunk: int = 256,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (y [B,T,D], h_last [B,L], conv_state)."""
+    B, T, D = x.shape
+    u = x @ p["wx"]  # [B, T, L]
+    g = jax.nn.gelu(x @ p["wg"])
+    c, conv_state = causal_conv1d(u, p["conv"], conv_state)
+    c32 = c.astype(jnp.float32)
+    a, bx = _gates(c32, p)
+
+    L = u.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((B, L), jnp.float32)
+
+    if T == 1:  # decode fast path
+        h = a[:, 0] * h0 + bx[:, 0]
+        hs = h[:, None, :]
+        h_last = h
+    elif T <= chunk:
+        hs, h_last = _assoc_scan_chunk(a, bx, h0)
+    else:
+        n = -(-T // chunk)
+        pad = n * chunk - T
+        if pad:
+            a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+            bx = jnp.pad(bx, ((0, 0), (0, pad), (0, 0)))
+        a = a.reshape(B, n, chunk, L).transpose(1, 0, 2, 3)
+        bx = bx.reshape(B, n, chunk, L).transpose(1, 0, 2, 3)
+
+        def step(h, ab):
+            ai, bi = ab
+            hs_i, h_new = _assoc_scan_chunk(ai, bi, h)
+            return h_new, hs_i
+
+        h_last, hs = jax.lax.scan(step, h0, (a, bx))
+        hs = hs.transpose(1, 0, 2, 3).reshape(B, n * chunk, L)[:, :T]
+
+    y = (hs.astype(x.dtype) * g) @ p["wo"]
+    return y, h_last, conv_state
+
+
+def init_rglru_params(key, d_model: int, conv_width: int, dtype):
+    lru = d_model
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d_model)
+    # Lambda init so that a^c in (0.9, 0.999) as in Griffin.
+    lam = jax.random.uniform(ks[3], (lru,), jnp.float32, 0.3, 0.8)
+    return {
+        "wx": (jax.random.normal(ks[0], (d_model, lru)) * s).astype(dtype),
+        "wg": (jax.random.normal(ks[1], (d_model, lru)) * s).astype(dtype),
+        "conv": (jax.random.normal(ks[2], (conv_width, lru)) * 0.1).astype(dtype),
+        "lambda": lam,
+        "gate_a_w": jnp.ones((lru,), jnp.float32),
+        "gate_a_b": jnp.zeros((lru,), jnp.float32),
+        "gate_i_w": jnp.ones((lru,), jnp.float32),
+        "gate_i_b": jnp.zeros((lru,), jnp.float32),
+        "wo": (jax.random.normal(key, (lru, d_model)) * s).astype(dtype),
+    }

@@ -1,0 +1,175 @@
+"""RWKV-6 "Finch" time-mix + channel-mix (attention-free, data-dependent decay).
+
+Recurrent form (per head, key-dim hd_k = value-dim hd_v = 64):
+
+    o_t = r_t . (S_{t-1} + (u * k_t) v_t^T)         # readout with bonus u
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T             # state update
+
+with w_t = exp(-exp(d_t)) in (0,1), d_t a data-dependent (LoRA) decay.
+Training/prefill uses a *chunked* form: ``lax.scan`` over chunks carrying S,
+exact within-chunk attention-like contraction (decay ratios computed in log
+space).  The pure step-by-step ``lax.scan`` over time is the oracle
+(``rwkv_time_mix_scan``) used by tests; the Pallas kernel mirrors the
+chunked form.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def token_shift(x: jax.Array, x_prev: Optional[jax.Array]):
+    """x: [B,T,D]; x_prev: [B,D] last token of the previous segment.
+    Returns x shifted right by one along T."""
+    if x_prev is None:
+        x_prev = jnp.zeros((x.shape[0], x.shape[-1]), x.dtype)
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def rwkv_projections(x: jax.Array, x_prev, p: dict, n_heads: int, head_dim: int):
+    """Compute r,k,v,g,w for time-mix.  Returns per-head tensors
+    [B,T,H,hd] and log-decay logw [B,T,H,hd] (<= 0)."""
+    B, T, D = x.shape
+    xs = token_shift(x, x_prev)
+    r = _mix(x, xs, p["mu_r"]) @ p["wr"]
+    k = _mix(x, xs, p["mu_k"]) @ p["wk"]
+    v = _mix(x, xs, p["mu_v"]) @ p["wv"]
+    g = jax.nn.silu(_mix(x, xs, p["mu_g"]) @ p["wg"])
+    dx = _mix(x, xs, p["mu_w"])
+    d = p["w_bias"] + jnp.tanh(dx @ p["w_lora_a"]) @ p["w_lora_b"]  # [B,T,H*hd]
+    logw = -jnp.exp(d.astype(jnp.float32))  # <= 0
+    hsplit = lambda t: t.reshape(B, T, n_heads, head_dim)
+    return hsplit(r), hsplit(k), hsplit(v), g, hsplit(logw)
+
+
+def rwkv_time_mix_scan(r, k, v, logw, u, s0=None):
+    """Oracle: step-by-step recurrence.  r,k,v,logw: [B,T,H,hd]; u: [H,hd].
+    Returns (o [B,T,H,hd], s_last [B,H,hd,hd])."""
+    B, T, H, hd = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, lwt = inp  # [B,H,hd]
+        kv = kt[..., :, None] * vt[..., None, :]  # [B,H,hdk,hdv]
+        o = jnp.einsum("bhk,bhkv->bhv", rt, s + u[..., :, None] * kv)
+        s = jnp.exp(lwt)[..., :, None] * s + kv
+        return s, o
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, logw))
+    s_last, o = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(o, 0, 1), s_last
+
+
+def rwkv_time_mix_chunked(r, k, v, logw, u, s0=None, chunk: int = 64):
+    """Chunked-parallel form, exact (log-space decay ratios).
+    Shapes as in rwkv_time_mix_scan."""
+    B, T, H, hd = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n = -(-T // chunk)
+    pad = n * chunk - T
+    f32 = lambda t: t.astype(jnp.float32)
+    r, k, v, logw = f32(r), f32(k), f32(v), f32(logw)
+    if pad:
+        zp = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zp(r), zp(k), zp(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    resh = lambda t: t.reshape(B, n, chunk, H, hd).transpose(1, 0, 3, 2, 4)
+    r, k, v, logw = resh(r), resh(k), resh(v), resh(logw)  # [n,B,H,Cn,hd]
+
+    def one_chunk(s, inp):
+        rc, kc, vc, lw = inp  # [B,H,Cn,hd]
+        cum = jnp.cumsum(lw, axis=2)  # [B,H,Cn,hd] log prod up to & incl t
+        total = cum[:, :, -1:, :]
+        # inter-chunk: o_inter[t] = (r_t * exp(cum[t-1])) . S_in
+        cum_excl = cum - lw  # log prod up to t-1
+        r_in = rc * jnp.exp(cum_excl)
+        o = jnp.einsum("bhtk,bhkv->bhtv", r_in, s)
+        # intra-chunk: A[t,i] = sum_d r[t,d] k[i,d] exp(cum_excl[t]-cum[i]), i<t
+        rt = rc * jnp.exp(cum_excl)
+        ki = kc * jnp.exp(-cum)
+        A = jnp.einsum("bhtk,bhik->bhti", rt, ki)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        A = jnp.where(mask, A, 0.0)
+        o = o + jnp.einsum("bhti,bhiv->bhtv", A, vc)
+        # current-token bonus
+        diag = jnp.einsum("bhtk,bhtk->bht", rc, u[:, None, :] * kc)
+        o = o + diag[..., None] * vc
+        # state update: S_out = diag(exp(total)) S + sum_i exp(total-cum[i]) k_i v_i^T
+        kscale = kc * jnp.exp(total - cum)
+        s = jnp.exp(total)[..., 0, :, None] * s + jnp.einsum(
+            "bhik,bhiv->bhkv", kscale, vc)
+        return s, o
+
+    s_last, o = jax.lax.scan(one_chunk, s0, (r, k, v, logw))
+    o = o.transpose(1, 0, 3, 2, 4).reshape(B, n * chunk, H, hd)[:, :T]
+    return o, s_last
+
+
+def group_norm_heads(o: jax.Array, scale: jax.Array, eps: float = 64e-5):
+    """RWKV's per-head group norm on the time-mix output. o: [B,T,H,hd]."""
+    mu = jnp.mean(o, axis=-1, keepdims=True)
+    var = jnp.var(o, axis=-1, keepdims=True)
+    y = (o - mu) * jax.lax.rsqrt(var + eps)
+    B, T, H, hd = o.shape
+    return y.reshape(B, T, H * hd) * scale
+
+
+def rwkv_time_mix(x, p, n_heads, head_dim, x_prev=None, s0=None,
+                  chunked: bool = True, chunk: int = 64):
+    """Full time-mix sublayer on (pre-normed) x: [B,T,D].
+    Returns (y [B,T,D], (x_last [B,D], s_last))."""
+    B, T, D = x.shape
+    r, k, v, g, logw = rwkv_projections(x, x_prev, p, n_heads, head_dim)
+    u = p["u"].astype(jnp.float32)
+    if T == 1 or not chunked:
+        o, s_last = rwkv_time_mix_scan(r, k, v, logw, u, s0)
+    else:
+        o, s_last = rwkv_time_mix_chunked(r, k, v, logw, u, s0, chunk=chunk)
+    y = group_norm_heads(o.astype(x.dtype), p["ln_x"]) @ p["wo"]
+    return y, (x[:, -1, :], s_last)
+
+
+def rwkv_channel_mix(x, p, x_prev=None):
+    """Channel-mix sublayer (squared-ReLU MLP with token shift).
+    Returns (y, x_last)."""
+    xs = token_shift(x, x_prev)
+    xk = _mix(x, xs, p["mu_c"])
+    h = jnp.square(jax.nn.relu(xk @ p["cm_w1"]))
+    return h @ p["cm_w2"], x[:, -1, :]
+
+
+def init_rwkv_params(key, d_model: int, d_ff: int, n_heads: int, head_dim: int,
+                     dtype):
+    ks = jax.random.split(key, 10)
+    s = 1.0 / math.sqrt(d_model)
+    mat = lambda k, shp, sc=s: (jax.random.normal(k, shp) * sc).astype(dtype)
+    return {
+        "mu_r": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_k": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_v": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_g": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_w": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_c": jnp.full((d_model,), 0.5, jnp.float32),
+        "wr": mat(ks[0], (d_model, n_heads * head_dim)),
+        "wk": mat(ks[1], (d_model, n_heads * head_dim)),
+        "wv": mat(ks[2], (d_model, n_heads * head_dim)),
+        "wg": mat(ks[3], (d_model, n_heads * head_dim)),
+        "wo": mat(ks[4], (n_heads * head_dim, d_model)),
+        "w_lora_a": mat(ks[5], (d_model, 64), 0.02),
+        "w_lora_b": mat(ks[6], (64, n_heads * head_dim), 0.02),
+        "w_bias": jnp.full((n_heads * head_dim,), -0.6, jnp.float32),
+        "u": (jax.random.normal(ks[7], (n_heads, head_dim)) * 0.1).astype(
+            jnp.float32),
+        "ln_x": jnp.ones((n_heads * head_dim,), jnp.float32),
+        "cm_w1": mat(ks[8], (d_model, d_ff)),
+        "cm_w2": mat(ks[9], (d_ff, d_model), 1.0 / math.sqrt(d_ff)),
+    }

@@ -1,0 +1,642 @@
+"""Composable decoder stack: block init/apply for every assigned layer kind,
+scanned over layers (keeps HLO size O(1) in depth), with decode caches and
+encoder-decoder (whisper) support.
+
+Layer kinds: "attn" | "attn_swa" | "attn_local" | "rglru" | "rwkv".
+The layer stack is grouped into repeating *pattern blocks* (cfg.block_pattern)
+so heterogeneous stacks (RecurrentGemma's r,r,a) still scan.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import rglru as RG
+from repro.models import rwkv as RW
+
+PyTree = Any
+
+
+# ==========================================================================
+# Structure helpers
+# ==========================================================================
+def stack_structure(cfg: ModelConfig) -> Tuple[int, Tuple[str, ...], Tuple[str, ...]]:
+    """(n_full_blocks, pattern, tail_kinds)."""
+    pat = cfg.block_pattern
+    n_full = cfg.n_layers // len(pat)
+    tail = cfg.layer_kinds[n_full * len(pat):]
+    return n_full, pat, tail
+
+
+def slot_name(i: int, kind: str) -> str:
+    return f"b{i}_{kind}"
+
+
+# ==========================================================================
+# Param init
+# ==========================================================================
+def _dense(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def init_ffn(key, cfg: ModelConfig, dtype) -> dict:
+    if cfg.moe is not None:
+        return MOE.init_moe_params(key, cfg.d_model, cfg.d_ff, cfg.moe, dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(cfg.d_model)
+    s_out = 1.0 / math.sqrt(cfg.d_ff)
+    return {
+        "w1": _dense(k1, (cfg.d_model, cfg.d_ff), s_in, dtype),
+        "w3": _dense(k2, (cfg.d_model, cfg.d_ff), s_in, dtype),
+        "w2": _dense(k3, (cfg.d_ff, cfg.d_model), s_out, dtype),
+    }
+
+
+def init_attn(key, cfg: ModelConfig, dtype, cross: bool = False) -> dict:
+    # hc >= n_heads: TP-padded compute heads (zero weights, inert; base.py)
+    d, h, hc, kv, hd = (cfg.d_model, cfg.n_heads, cfg.n_heads_c,
+                        cfg.n_kv_heads, cfg.head_dim_)
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    wq = _dense(ks[0], (d, h * hd), s, dtype)
+    wo = _dense(ks[3], (h * hd, d), 1.0 / math.sqrt(h * hd), dtype)
+    if hc != h:
+        wq = jnp.concatenate(
+            [wq, jnp.zeros((d, (hc - h) * hd), dtype)], axis=1)
+        wo = jnp.concatenate(
+            [wo, jnp.zeros(((hc - h) * hd, d), dtype)], axis=0)
+    p = {
+        "wq": wq,
+        "wk": _dense(ks[1], (d, kv * hd), s, dtype),
+        "wv": _dense(ks[2], (d, kv * hd), s, dtype),
+        "wo": wo,
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    return p
+
+
+def init_block(key, cfg: ModelConfig, kind: str, dtype) -> dict:
+    k_attn, k_ffn, k_extra = jax.random.split(key, 3)
+    p: dict = {"norm1": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if kind in ("attn", "attn_swa", "attn_local"):
+        p.update(init_attn(k_attn, cfg, dtype))
+    elif kind == "rglru":
+        p.update(RG.init_rglru_params(k_attn, cfg.d_model, cfg.rglru_conv_width,
+                                      dtype))
+    elif kind == "rwkv":
+        p.update(RW.init_rwkv_params(k_attn, cfg.d_model, cfg.d_ff,
+                                     cfg.n_heads, cfg.rwkv_head_dim, dtype))
+        p["norm2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        return p  # rwkv carries its own channel-mix; no separate ffn
+    else:
+        raise ValueError(kind)
+    p["norm2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    p["ffn"] = init_ffn(k_ffn, cfg, dtype)
+    return p
+
+
+def init_cross_block_extra(key, cfg: ModelConfig, dtype) -> dict:
+    """Cross-attention sublayer params added to decoder blocks (enc-dec)."""
+    return {
+        "normx": jnp.zeros((cfg.d_model,), jnp.float32),
+        "xattn": init_attn(key, cfg, dtype, cross=True),
+    }
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> PyTree:
+    """Full parameter pytree.  Per-kind block params are stacked on a leading
+    block axis for lax.scan."""
+    n_full, pat, tail = stack_structure(cfg)
+    keys = jax.random.split(key, 8)
+    V, D = cfg.padded_vocab, cfg.d_model
+    params: dict = {
+        "embed": _dense(keys[0], (V, D), 0.02, dtype),
+        "final_norm": jnp.zeros((D,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = _dense(keys[1], (D, V), 0.02, dtype)
+    if cfg.frontend is not None:
+        # STUB frontend: single linear projection of precomputed embeddings.
+        params["frontend_proj"] = _dense(keys[2], (D, D), 1.0 / math.sqrt(D),
+                                         dtype)
+
+    def stacked_blocks(base_key, kind, n):
+        ks = jax.random.split(base_key, max(n, 1))
+        return jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[init_block(ks[i], cfg, kind, dtype)
+                              for i in range(n)])
+
+    blocks = {}
+    kb = jax.random.split(keys[3], len(pat))
+    for i, kind in enumerate(pat):
+        if n_full > 0:
+            blk = stacked_blocks(kb[i], kind, n_full)
+            if cfg.is_encdec and kind.startswith("attn"):
+                extra_ks = jax.random.split(jax.random.fold_in(kb[i], 7), n_full)
+                extra = jax.tree.map(
+                    lambda *xs: jnp.stack(xs),
+                    *[init_cross_block_extra(extra_ks[j], cfg, dtype)
+                      for j in range(n_full)])
+                blk.update(extra)
+            blocks[slot_name(i, kind)] = blk
+    params["blocks"] = blocks
+    if tail:
+        kt = jax.random.split(keys[4], len(tail))
+        params["tail"] = [init_block(kt[i], cfg, kind, dtype)
+                          for i, kind in enumerate(tail)]
+    if cfg.is_encdec:
+        ke = jax.random.split(keys[5], cfg.encoder_layers)
+        params["encoder"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[init_block(ke[i], cfg, "attn", dtype)
+              for i in range(cfg.encoder_layers)])
+        params["enc_norm"] = jnp.zeros((D,), jnp.float32)
+    return params
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16) -> PyTree:
+    """ShapeDtypeStruct pytree of init_params without allocating."""
+    return jax.eval_shape(lambda k: init_params(k, cfg, dtype),
+                          jax.random.key(0))
+
+
+# ==========================================================================
+# Block apply — full sequence (train / prefill)
+# ==========================================================================
+def _attn_window(cfg: ModelConfig, kind: str) -> Optional[int]:
+    if kind == "attn_swa":
+        return cfg.sliding_window
+    if kind == "attn_local":
+        return cfg.attn_local_window
+    return None
+
+
+def _proj_qkv(h, p, cfg: ModelConfig, positions, rope: bool = True):
+    B, T, D = h.shape
+    H, KV, hd = cfg.n_heads_c, cfg.n_kv_heads, cfg.head_dim_
+    q = (h @ p["wq"]).reshape(B, T, H, hd)
+    k = (h @ p["wk"]).reshape(B, T, KV, hd)
+    v = (h @ p["wv"]).reshape(B, T, KV, hd)
+    if cfg.qk_norm and "q_norm" in p:
+        q = L.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = L.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _expand_kv(t: jax.Array, n_heads: int) -> jax.Array:
+    """[B,T,KV,hd] -> [B,T,H,hd] by repeating each kv head H/KV times."""
+    B, T, KV, hd = t.shape
+    if KV == n_heads:
+        return t
+    return jnp.repeat(t, n_heads // KV, axis=2)
+
+
+def attn_block_seq(x, p, cfg: ModelConfig, kind: str, positions,
+                   mesh=None, want_cache=False, causal=True,
+                   enc_out=None, q_chunk=1024):
+    """Returns (x, cache_or_None, aux_loss)."""
+    window = _attn_window(cfg, kind)
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    q, k, v = _proj_qkv(h, p, cfg, positions)
+    o = L.attention(q, _expand_kv(k, cfg.n_heads_c),
+                    _expand_kv(v, cfg.n_heads_c),
+                    causal=causal, window=window,
+                    q_positions=positions, k_positions=positions,
+                    q_chunk=q_chunk)
+    B, T, H, hd = o.shape
+    x = x + o.reshape(B, T, H * hd) @ p["wo"]
+
+    if enc_out is not None:  # cross-attention (enc-dec decoder)
+        hx = L.rms_norm(x, p["normx"], cfg.norm_eps)
+        px = p["xattn"]
+        Bq, Tq, D = hx.shape
+        KV = cfg.n_kv_heads
+        qx = (hx @ px["wq"]).reshape(Bq, Tq, cfg.n_heads_c, hd)
+        kx = (enc_out @ px["wk"]).reshape(Bq, enc_out.shape[1], KV, hd)
+        vx = (enc_out @ px["wv"]).reshape(Bq, enc_out.shape[1], KV, hd)
+        ox = L.attention(qx, _expand_kv(kx, cfg.n_heads_c),
+                         _expand_kv(vx, cfg.n_heads_c),
+                         causal=False, q_chunk=q_chunk)
+        x = x + ox.reshape(Bq, Tq, cfg.n_heads_c * hd) @ px["wo"]
+
+    h2 = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+    aux = jnp.float32(0.0)
+    if cfg.moe is not None:
+        y, aux = MOE.moe_ffn(h2, p["ffn"], cfg.moe, mesh)
+    else:
+        y = L.swiglu(h2, p["ffn"]["w1"], p["ffn"]["w3"], p["ffn"]["w2"])
+    x = x + y
+
+    cache = None
+    if want_cache:
+        S = min(cfg_cache_len(cfg, kind), k.shape[1]) if window else k.shape[1]
+        cache = _seq_to_ring_cache(k, v, S)
+    return x, cache, aux
+
+
+def cfg_cache_len(cfg: ModelConfig, kind: str) -> int:
+    w = _attn_window(cfg, kind)
+    return w if w is not None else 0
+
+
+def make_cache_len(cfg: ModelConfig, kind: str, seq_len: int) -> int:
+    w = _attn_window(cfg, kind)
+    return min(seq_len, w) if w is not None else seq_len
+
+
+def _seq_to_ring_cache(k, v, S):
+    """Store the last S tokens of k/v at ring slots (t mod S)."""
+    B, T, KV, hd = k.shape
+    if T <= S:
+        pad = S - T
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # slots are t mod S == t for t < T; already aligned.
+        return {"k": kc, "v": vc}
+    # keep tokens T-S..T-1; token t goes to slot t mod S
+    tail_k, tail_v = k[:, T - S:], v[:, T - S:]
+    slots = jnp.mod(jnp.arange(T - S, T), S)
+    kc = jnp.zeros((B, S, KV, hd), k.dtype).at[:, slots].set(tail_k)
+    vc = jnp.zeros((B, S, KV, hd), v.dtype).at[:, slots].set(tail_v)
+    return {"k": kc, "v": vc}
+
+
+def rglru_block_seq(x, p, cfg: ModelConfig, positions=None, mesh=None,
+                    want_cache=False, h0=None, conv_state=None):
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    rg = {k_: p[k_] for k_ in ("wx", "wg", "conv", "lambda", "gate_a_w",
+                               "gate_a_b", "gate_i_w", "gate_i_b", "wo")}
+    y, h_last, conv_state = RG.rglru_apply(h, rg, h0=h0, conv_state=conv_state)
+    x = x + y
+    h2 = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+    x = x + L.swiglu(h2, p["ffn"]["w1"], p["ffn"]["w3"], p["ffn"]["w2"])
+    cache = {"h": h_last, "conv": conv_state} if want_cache else None
+    return x, cache, jnp.float32(0.0)
+
+
+def rwkv_block_seq(x, p, cfg: ModelConfig, positions=None, mesh=None,
+                   want_cache=False, state=None):
+    """state: None or dict(s, xtm, xcm)."""
+    s0 = state["s"] if state else None
+    xtm = state["xtm"] if state else None
+    xcm = state["xcm"] if state else None
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    y, (x_last_tm, s_last) = RW.rwkv_time_mix(
+        h, p, cfg.n_heads, cfg.rwkv_head_dim, x_prev=xtm, s0=s0,
+        chunked=x.shape[1] > 1)
+    x = x + y.astype(x.dtype)  # keep the residual stream in compute dtype
+    h2 = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+    y2, x_last_cm = RW.rwkv_channel_mix(h2, p, x_prev=xcm)
+    x = x + y2.astype(x.dtype)
+    cache = ({"s": s_last,
+              "xtm": x_last_tm.astype(x.dtype),
+              "xcm": x_last_cm.astype(x.dtype)}
+             if want_cache else None)
+    return x, cache, jnp.float32(0.0)
+
+
+def apply_block_seq(x, p, cfg, kind, positions, mesh=None, want_cache=False,
+                    cache_in=None, enc_out=None, q_chunk=1024):
+    if kind in ("attn", "attn_swa", "attn_local"):
+        return attn_block_seq(x, p, cfg, kind, positions, mesh=mesh,
+                              want_cache=want_cache, enc_out=enc_out,
+                              q_chunk=q_chunk)
+    if kind == "rglru":
+        st = cache_in or {}
+        return rglru_block_seq(x, p, cfg, positions, mesh,
+                               want_cache=want_cache,
+                               h0=st.get("h"), conv_state=st.get("conv"))
+    if kind == "rwkv":
+        return rwkv_block_seq(x, p, cfg, positions, mesh,
+                              want_cache=want_cache, state=cache_in)
+    raise ValueError(kind)
+
+
+# ==========================================================================
+# Block apply — decode (single token, ring caches)
+# ==========================================================================
+def _kv_seq_spec(mesh, B: int, S: int):
+    """Flash-decoding layout for [B,S,H,hd]: batch over data axes, ring
+    length over "model" (partial softmax + small all-reduce, instead of
+    resharding the cache to head-parallel every step)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    dsz = 1
+    for a in dp:
+        dsz *= mesh.shape[a]
+    bspec = dp if B % max(dsz, 1) == 0 else None
+    sspec = "model" if S % mesh.shape["model"] == 0 else None
+    return NamedSharding(mesh, P(bspec, sspec, None, None))
+
+
+def attn_block_decode(x, p, cache, cfg: ModelConfig, kind: str, pos,
+                      mesh=None, enc_cache=None):
+    """x: [B,1,D]; cache: {"k","v"} ring [B,S,KV,hd]; pos: scalar int32
+    tokens generated so far (the current token's absolute position)."""
+    window = _attn_window(cfg, kind)
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    positions = jnp.broadcast_to(pos, (x.shape[0], 1)).astype(jnp.int32)
+    q, k, v = _proj_qkv(h, p, cfg, positions)
+    S = cache["k"].shape[1]
+    slot = jnp.mod(pos, S)
+    kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    kx = _expand_kv(kc, cfg.n_heads_c)
+    vx = _expand_kv(vc, cfg.n_heads_c)
+    if mesh is not None and "model" in mesh.axis_names:
+        sh = _kv_seq_spec(mesh, kx.shape[0], S)
+        kx = jax.lax.with_sharding_constraint(kx, sh)
+        vx = jax.lax.with_sharding_constraint(vx, sh)
+    o = L.decode_attention(q, kx, vx, pos + 1, window=window)
+    B, T, H, hd = o.shape
+    x = x + o.reshape(B, 1, H * hd) @ p["wo"]
+
+    if enc_cache is not None:
+        hx = L.rms_norm(x, p["normx"], cfg.norm_eps)
+        px = p["xattn"]
+        qx = (hx @ px["wq"]).reshape(B, 1, cfg.n_heads_c, hd)
+        ox = L.attention(qx, _expand_kv(enc_cache["k"], cfg.n_heads_c),
+                         _expand_kv(enc_cache["v"], cfg.n_heads_c),
+                         causal=False, q_chunk=1)
+        x = x + ox.reshape(B, 1, cfg.n_heads_c * hd) @ px["wo"]
+
+    h2 = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+    aux = jnp.float32(0.0)
+    if cfg.moe is not None:
+        y, aux = MOE.moe_ffn(h2, p["ffn"], cfg.moe, mesh)
+    else:
+        y = L.swiglu(h2, p["ffn"]["w1"], p["ffn"]["w3"], p["ffn"]["w2"])
+    return x + y, {"k": kc, "v": vc}
+
+
+def apply_block_decode(x, p, cache, cfg, kind, pos, mesh=None, enc_cache=None):
+    if kind in ("attn", "attn_swa", "attn_local"):
+        return attn_block_decode(x, p, cache, cfg, kind, pos, mesh=mesh,
+                                 enc_cache=enc_cache)
+    if kind == "rglru":
+        x, st, _ = rglru_block_seq(x, p, cfg, want_cache=True,
+                                   h0=cache["h"], conv_state=cache["conv"])
+        return x, st
+    if kind == "rwkv":
+        x, st, _ = rwkv_block_seq(x, p, cfg, want_cache=True, state=cache)
+        return x, st
+    raise ValueError(kind)
+
+
+# ==========================================================================
+# Cache init (abstract-friendly: plain zeros)
+# ==========================================================================
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               dtype=jnp.bfloat16) -> PyTree:
+    """Decode caches for the whole stack.  seq_len = max context length
+    (ring size is min(seq_len, window) for windowed kinds)."""
+    n_full, pat, tail = stack_structure(cfg)
+    KV, hd = cfg.n_kv_heads, cfg.head_dim_
+
+    def one(kind):
+        if kind in ("attn", "attn_swa", "attn_local"):
+            S = make_cache_len(cfg, kind, seq_len)
+            z = jnp.zeros((batch, S, KV, hd), dtype)
+            return {"k": z, "v": z}
+        if kind == "rglru":
+            return {"h": jnp.zeros((batch, cfg.d_model), jnp.float32),
+                    "conv": jnp.zeros((batch, cfg.rglru_conv_width - 1,
+                                       cfg.d_model), dtype)}
+        if kind == "rwkv":
+            return {"s": jnp.zeros((batch, cfg.n_heads, cfg.rwkv_head_dim,
+                                    cfg.rwkv_head_dim), jnp.float32),
+                    "xtm": jnp.zeros((batch, cfg.d_model), dtype),
+                    "xcm": jnp.zeros((batch, cfg.d_model), dtype)}
+        raise ValueError(kind)
+
+    cache: dict = {"pos": jnp.zeros((), jnp.int32), "blocks": {}}
+    for i, kind in enumerate(pat):
+        if n_full:
+            cache["blocks"][slot_name(i, kind)] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (n_full,) + x.shape), one(kind))
+    if tail:
+        cache["tail"] = [one(kind) for kind in tail]
+    if cfg.is_encdec:
+        Te = cfg.encoder_seq
+        z = jnp.zeros((cfg.encoder_layers, batch, Te, KV, hd), dtype)
+        cache["enc"] = {"k": z, "v": z}
+    return cache
+
+
+# ==========================================================================
+# Full-stack apply
+# ==========================================================================
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy in ("full", "2level"):
+        return jax.checkpoint(fn)
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    raise ValueError(policy)
+
+
+def _group_factor(n: int) -> int:
+    """Divisor of n closest to sqrt(n) (for 2-level remat grouping)."""
+    best, target = 1, math.sqrt(n)
+    for g in range(1, n + 1):
+        if n % g == 0 and abs(g - target) < abs(best - target):
+            best = g
+    return best
+
+
+def forward(params, tokens, cfg: ModelConfig, *, mesh=None,
+            frontend_embeds=None, want_cache=False, remat="none",
+            q_chunk=1024, unroll=False, last_only=False):
+    """Full-sequence forward.  tokens: [B, T_text] int32.
+    frontend_embeds: [B, Nf, D] for vlm (prepended) / [B, Tenc, D] for audio
+    (encoder input).  Returns (logits [B,T,V], cache|None, aux).
+
+    ``unroll=True`` python-loops over blocks instead of lax.scan — used by
+    the roofline extractor, whose two-point extrapolation needs HLO where
+    per-layer cost appears once per layer (XLA cost_analysis counts a scan
+    body once regardless of trip count)."""
+    n_full, pat, tail = stack_structure(cfg)
+    B, Tt = tokens.shape
+    x = params["embed"][tokens]  # gather
+
+    enc_out = None
+    if cfg.frontend == "vision" and frontend_embeds is not None:
+        fe = frontend_embeds @ params["frontend_proj"]
+        x = jnp.concatenate([fe.astype(x.dtype), x], axis=1)
+    T = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+    if cfg.is_encdec and frontend_embeds is not None:
+        enc_out = encode(params, frontend_embeds, cfg, mesh=mesh,
+                         q_chunk=q_chunk)
+
+    aux_total = jnp.float32(0.0)
+    caches: dict = {"pos": jnp.asarray(T, jnp.int32), "blocks": {}}
+
+    def block_body(carry, slices):
+        x, aux = carry
+        # barrier: keeps the bf16->f32 casts of the (checkpoint-saved)
+        # residual stream inside the recompute, so XLA cannot hoist an f32
+        # copy of the whole saved stack out of the backward loop.
+        x = jax.lax.optimization_barrier(x)
+        new_caches = {}
+        for i, kind in enumerate(pat):
+            sl = slices[slot_name(i, kind)]
+            x, c, a = apply_block_seq(
+                x, sl, cfg, kind, positions, mesh=mesh,
+                want_cache=want_cache, enc_out=enc_out, q_chunk=q_chunk)
+            aux = aux + a
+            if want_cache:
+                new_caches[slot_name(i, kind)] = c
+        return (x, aux), new_caches if want_cache else None
+
+    if n_full and unroll:
+        cc = []
+        for bi in range(n_full):
+            sl = jax.tree.map(lambda t: t[bi], params["blocks"])
+            (x, aux_total), c = block_body((x, aux_total), sl)
+            if want_cache:
+                cc.append(c)
+        if want_cache:
+            caches["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *cc)
+    elif n_full and remat == "2level" and not want_cache and n_full > 3:
+        # sqrt(L) activation checkpointing: only every g-th residual stream is
+        # saved across the layer scan; within a group each block is itself
+        # checkpointed.  Memory: O(sqrt(L)) saved carries instead of O(L).
+        g = _group_factor(n_full)
+        grouped = jax.tree.map(
+            lambda t: t.reshape((n_full // g, g) + t.shape[1:]),
+            params["blocks"])
+        inner_body = jax.checkpoint(block_body)
+
+        def group_body(carry, gparams):
+            carry, _ = jax.lax.scan(inner_body, carry, gparams)
+            return carry, None
+
+        (x, aux_total), _ = jax.lax.scan(
+            jax.checkpoint(group_body), (x, aux_total), grouped)
+    elif n_full:
+        body = _remat(block_body, remat)
+        (x, aux_total), stacked_caches = jax.lax.scan(
+            body, (x, aux_total), params["blocks"])
+        if want_cache:
+            caches["blocks"] = stacked_caches
+    for i, kind in enumerate(tail):
+        p_t = params["tail"][i]
+        x, c, a = apply_block_seq(x, p_t, cfg, kind, positions, mesh=mesh,
+                                  want_cache=want_cache, enc_out=enc_out,
+                                  q_chunk=q_chunk)
+        aux_total = aux_total + a
+        if want_cache:
+            caches.setdefault("tail", []).append(c)
+    if cfg.is_encdec and want_cache and enc_out is not None:
+        caches["enc"] = _enc_cross_cache(params, enc_out, cfg)
+
+    if last_only:  # prefill: only the last position's logits are needed
+        x = x[:, -1:, :]
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    unembed = params.get("unembed")
+    if unembed is None:
+        unembed = params["embed"].T
+    logits = x @ unembed
+    return logits, (caches if want_cache else None), aux_total
+
+
+def encode(params, frames, cfg: ModelConfig, *, mesh=None, q_chunk=1024):
+    """Whisper-style encoder over precomputed frame embeddings [B,Te,D]."""
+    x = frames @ params["frontend_proj"]
+    B, T, D = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+    def body(carry, p):
+        x, = carry
+        x, _, _ = attn_block_seq(x, p, cfg, "attn", positions, mesh=mesh,
+                                 causal=False, q_chunk=q_chunk)
+        return (x,), None
+
+    (x,), _ = jax.lax.scan(body, (x,), params["encoder"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _enc_cross_cache(params, enc_out, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder output for decode."""
+    KV, hd = cfg.n_kv_heads, cfg.head_dim_
+    B, Te, D = enc_out.shape
+
+    def per_block(pb):
+        px = pb["xattn"]
+        k = (enc_out @ px["wk"]).reshape(B, Te, KV, hd)
+        v = (enc_out @ px["wv"]).reshape(B, Te, KV, hd)
+        return {"k": k, "v": v}
+
+    # blocks are stacked [n_full, ...]: vmap the projection over the stack.
+    slot = slot_name(0, "attn")
+    return jax.vmap(per_block)(params["blocks"][slot])
+
+
+def decode_step(params, cache, token, cfg: ModelConfig, *, mesh=None,
+                unroll=False):
+    """One decode step.  token: [B,1] int32.  Returns (logits [B,1,V], cache)."""
+    n_full, pat, tail = stack_structure(cfg)
+    pos = cache["pos"]
+    x = params["embed"][token]
+
+    enc_cache_stack = cache.get("enc")
+
+    def block_body(carry, slices):
+        x, = carry
+        blk_params, blk_cache, enc_c = slices
+        new_cache = {}
+        for i, kind in enumerate(pat):
+            sn = slot_name(i, kind)
+            x, c = apply_block_decode(x, blk_params[sn], blk_cache[sn], cfg,
+                                      kind, pos, mesh=mesh, enc_cache=enc_c)
+            new_cache[sn] = c
+        return (x,), new_cache
+
+    new_cache = {"pos": pos + 1, "blocks": cache["blocks"]}
+    if n_full and unroll:
+        cc = []
+        for bi in range(n_full):
+            sl = jax.tree.map(lambda t: t[bi],
+                              (params["blocks"], cache["blocks"],
+                               enc_cache_stack))
+            (x,), c = block_body((x,), sl)
+            cc.append(c)
+        new_cache["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *cc)
+    elif n_full:
+        (x,), nc = jax.lax.scan(
+            block_body, (x,),
+            (params["blocks"], cache["blocks"], enc_cache_stack))
+        new_cache["blocks"] = nc
+    if tail:
+        new_cache["tail"] = []
+        for i, kind in enumerate(stack_structure(cfg)[2]):
+            x, c = apply_block_decode(x, params["tail"][i], cache["tail"][i],
+                                      cfg, kind, pos, mesh=mesh)
+            new_cache["tail"].append(c)
+    if enc_cache_stack is not None:
+        new_cache["enc"] = enc_cache_stack
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    unembed = params.get("unembed")
+    if unembed is None:
+        unembed = params["embed"].T
+    return x @ unembed, new_cache

@@ -1,0 +1,111 @@
+"""AdamW with fp32 master weights, built for ZeRO-1 sharding.
+
+The optimizer state (master, m, v) carries its own PartitionSpecs (see
+``repro.sharding.rules.zero1_spec``) that additionally shard over the data
+axis; XLA then emits the reduce-scatter / all-gather pattern of ZeRO-1
+automatically from the sharding mismatch between grads (replicated over data)
+and optimizer state (data-sharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    # "bfloat16" halves m/v memory (memory-efficient Adam; used for the
+    # >=100B configs on 16GB/chip pods — see DESIGN.md §5).  Update math is
+    # always fp32; only storage is cast.
+    state_dtype: str = "float32"
+
+    @property
+    def state_jnp_dtype(self):
+        return jnp.dtype(self.state_dtype)
+
+
+def schedule(step: jax.Array, opt: AdamWConfig) -> jax.Array:
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(opt.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - opt.warmup_steps)
+                 / jnp.maximum(opt.total_steps - opt.warmup_steps, 1), 0.0, 1.0)
+    cos = opt.min_lr_frac + (1 - opt.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return opt.lr * warm * cos
+
+
+def adamw_init(params: PyTree, opt: "AdamWConfig" = None):
+    sd = opt.state_jnp_dtype if opt is not None else jnp.float32
+    # copy=True: with fp32 params astype would alias, and params/master are
+    # donated as separate buffers by the train step.
+    master = jax.tree.map(
+        lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params)
+    m = jax.tree.map(lambda p: jnp.zeros(p.shape, sd), params)
+    v = jax.tree.map(lambda p: jnp.zeros(p.shape, sd), params)
+    return master, m, v
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, params, master, m, v, step, opt: AdamWConfig):
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, opt.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(step, opt)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1 - opt.b1 ** t
+    bc2 = 1 - opt.b2 ** t
+
+    sd = opt.state_jnp_dtype
+
+    def upd_one(g, p_master, m_, v_):
+        g = g.astype(jnp.float32) * scale
+        m2 = opt.b1 * m_.astype(jnp.float32) + (1 - opt.b1) * g
+        v2 = opt.b2 * v_.astype(jnp.float32) + (1 - opt.b2) * jnp.square(g)
+        update = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + opt.eps)
+        p2 = p_master - lr * (update + opt.weight_decay * p_master)
+        return p2, m2.astype(sd), v2.astype(sd)
+
+    upd = upd_one
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_pm = jax.tree.leaves(master)
+    flat_m = jax.tree.leaves(m)
+    flat_v = jax.tree.leaves(v)
+    out_p, out_m, out_v = [], [], []
+    token = None
+    for g, pm, m_, v_ in zip(flat_g, flat_pm, flat_m, flat_v):
+        if token is not None:
+            # serialize per-leaf updates: caps optimizer temp memory at one
+            # leaf's working set instead of all leaves scheduled concurrently
+            g, _ = jax.lax.optimization_barrier((g, token))
+        p2, m2, v2 = upd(g, pm, m_, v_)
+        token = p2
+        out_p.append(p2)
+        out_m.append(m2)
+        out_v.append(v2)
+    new_master = jax.tree.unflatten(treedef, out_p)
+    new_m = jax.tree.unflatten(treedef, out_m)
+    new_v = jax.tree.unflatten(treedef, out_v)
+    # compute params follow the original dtype (bf16 training)
+    dtypes = jax.tree.leaves(jax.tree.map(lambda p: p.dtype, params))
+    new_params = jax.tree.unflatten(
+        treedef, [p.astype(d) for p, d in zip(out_p, dtypes)])
+    return new_params, new_master, new_m, new_v

@@ -1,0 +1,84 @@
+"""Gradient compression for cross-pod data parallelism.
+
+int8 blockwise quantization with error feedback: the all-reduce over the
+"pod" axis (slow inter-pod links) moves 4x fewer bytes; the quantization
+residual is carried to the next step so the compression is unbiased in the
+long run (standard error-feedback SGD analysis).
+
+Usage:
+    comp = Int8Compressor(like=grads_shape)
+    train_step = make_train_step(..., grad_compression=comp.pair())
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: f32[...] -> (int8 codes, f32 per-block scales)."""
+    flat = x.reshape(-1)
+    pad = (-flat.size) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    blocks = q.astype(jnp.float32) * scale[:, None]
+    flat = blocks.reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compress_tree(tree: Any) -> Any:
+    return jax.tree.map(lambda g: (_quantize(g), g.shape), tree,
+                        is_leaf=lambda x: isinstance(x, jax.Array))
+
+
+def decompress_tree(ctree: Any) -> Any:
+    def one(leaf):
+        (q, scale), shape = leaf
+        return _dequantize(q, scale, shape)
+
+    return jax.tree.map(one, ctree,
+                        is_leaf=lambda x: isinstance(x, tuple)
+                        and len(x) == 2 and isinstance(x[1], tuple))
+
+
+class Int8Compressor:
+    """Error-feedback int8 compressor (stateful residual carried by caller
+    or kept functional via ``apply``)."""
+
+    def pair(self):
+        return (compress_tree, decompress_tree)
+
+    @staticmethod
+    def apply_with_feedback(grads: Any, residual: Any) -> Tuple[Any, Any]:
+        """(grads+residual) -> (dequantized grads, new residual)."""
+        def one(g, r):
+            x = g + r
+            q, scale = _quantize(x)
+            deq = _dequantize(q, scale, x.shape)
+            return deq, x - deq
+
+        out = jax.tree.map(one, grads, residual)
+        deq = jax.tree.map(lambda t: t[0], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        res = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        return deq, res
+
+    @staticmethod
+    def init_residual(params: Any) -> Any:
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

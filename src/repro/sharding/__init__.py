@@ -1,0 +1,7 @@
+from repro.sharding.rules import (  # noqa: F401
+    batch_specs,
+    cache_specs,
+    named,
+    param_specs,
+    train_state_specs,
+)

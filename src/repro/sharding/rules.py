@@ -1,0 +1,292 @@
+"""Sharding rules: parameter / optimizer-state / batch / cache PartitionSpecs.
+
+Conventions (baseline "megatron-style TP + DP", see DESIGN.md §5):
+- vocab & FFN hidden (d_ff / expert d_ff / lru width / rwkv heads) -> "model"
+- attention q-heads -> "model" when divisible; kv projections sharded only
+  when n_kv_heads divides the model axis (GQA with kv < axis => replicated)
+- batch -> all non-"model" axes ("pod","data")
+- ZeRO-1: optimizer state (master/m/v) additionally sharded over "data" on
+  the first divisible unsharded dim
+- decode KV caches: batch over data axes when divisible; ring length S over
+  "model" (flash-decoding style sharded-softmax is then emitted by GSPMD);
+  recurrent states: width/heads over "model"
+
+Every rule degrades to replication when a dim does not divide the axis
+(whisper's 6 heads on a 16-way model axis, batch-1 long-context decode, ...).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+PyTree = Any
+
+
+def _axis(mesh, name: str) -> int:
+    # works for both Mesh and AbstractMesh
+    return dict(mesh.shape).get(name, 1)
+
+
+def data_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def named(mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+# --------------------------------------------------------------------------
+# Parameter specs
+# --------------------------------------------------------------------------
+def _leaf_spec(path: tuple, shape: tuple, cfg: ModelConfig, mesh) -> P:
+    keys = [getattr(p, "key", getattr(p, "name", None)) or str(getattr(p, "idx", ""))
+            for p in path]
+    name = keys[-1]
+    m = _axis(mesh, "model")
+    in_moe_ffn = "ffn" in keys and cfg.moe is not None
+    in_rwkv = any("rwkv" in k for k in keys if isinstance(k, str))
+
+    def tail(spec_tail: tuple) -> P:
+        """Pad leading stacked-block dims with None."""
+        lead = len(shape) - len(spec_tail)
+        return P(*([None] * lead + list(spec_tail)))
+
+    def shard_if(dim_size: int, axis="model"):
+        return axis if _div(dim_size, _axis(mesh, axis)) else None
+
+    if name == "embed":
+        return P(shard_if(shape[0]), None)
+    if name == "unembed":
+        return P(None, shard_if(shape[1]))
+    if name == "frontend_proj":
+        return P(None, shard_if(shape[1]))
+
+    if in_moe_ffn and name in ("w1", "w2", "w3"):
+        from repro.models import moe as _moe
+        if (_moe.MOE_MODE == "ep_decode"
+                and cfg.moe.n_experts % m == 0):
+            d_ok = _div(shape[-1] if name in ("w1", "w3") else shape[-2],
+                        _axis(mesh, "data"))
+            fax = "data" if d_ok else None
+            if name in ("w1", "w3"):
+                return tail(("model", None, fax))
+            return tail(("model", fax, None))
+        # Expert weights are the bulk of MoE params (>90%): storage is
+        # FSDP-sharded over ALL mesh axes on the d_ff dim; the per-layer
+        # all-gather back to the compute layout (d_ff over "model" only)
+        # happens inside the layer scan (ZeRO-3 semantics, emitted by GSPMD
+        # at the shard_map boundary).
+        dpx = data_axes(mesh)
+        d = 1
+        for a in dpx:
+            d *= _axis(mesh, a)
+        fdim = -1 if name in ("w1", "w3") else -2
+        f = shape[fdim]
+        if _div(f, m * d) and d > 1:
+            ax: Any = ("model",) + dpx
+        elif _div(f, m):
+            ax = "model"
+        else:
+            ax = None
+        t = [None, None, None]
+        t[fdim] = ax
+        return tail(tuple(t))
+    if name == "router":
+        return tail((None, None))
+
+    if name in ("w1", "w3", "cm_w1"):  # [D, F]
+        return tail((None, shard_if(shape[-1])))
+    if name in ("w2", "cm_w2"):  # [F, D]
+        return tail((shard_if(shape[-2]), None))
+
+    if name == "wq":
+        ok = _div(cfg.n_heads_c, m)
+        return tail((None, "model" if ok else None))
+    if name in ("wk", "wv"):
+        if in_rwkv:
+            ok = _div(cfg.n_heads, m)
+        else:
+            ok = _div(cfg.n_kv_heads, m)
+        return tail((None, "model" if ok else None))
+    if name in ("wr", "wg") and in_rwkv:
+        ok = _div(cfg.n_heads, m)
+        return tail((None, "model" if ok else None))
+    if name == "wo":
+        # attn [H*hd, D] / rglru [L, D] / rwkv [H*hd, D]
+        return tail((shard_if(shape[-2]), None))
+    if name in ("wx", "wg"):  # rglru in-projections [D, L]
+        return tail((None, shard_if(shape[-1])))
+    if name == "conv":  # [W, L]
+        return tail((None, shard_if(shape[-1])))
+    if name in ("lambda", "gate_a_w", "gate_a_b", "gate_i_w", "gate_i_b"):
+        return tail((shard_if(shape[-1]),))
+    if name == "u":  # [H, hd]
+        return tail((shard_if(shape[-2]), None))
+    if name == "ln_x":  # [H*hd]
+        return tail((shard_if(shape[-1]),))
+    if name in ("w_lora_a", "w_lora_b"):
+        return tail((None, None))
+    # norms, mus, biases, small vectors -> replicated
+    return P(*([None] * len(shape)))
+
+
+def param_specs(cfg: ModelConfig, mesh, params_shape: PyTree,
+                mode: str = "tp") -> PyTree:
+    """PartitionSpec pytree matching an (abstract) params pytree.
+
+    mode="tp"   (baseline): megatron-style TP over "model" + replication.
+    mode="fsdp" (hillclimb, dense archs): every weight fully sharded over
+    ("model","data") on its largest divisible dim; batch is sharded over
+    ALL axes; XLA emits per-layer all-gathers (ZeRO-3).  Trades the per-token
+    activation all-reduces of wide TP for per-layer weight gathers — wins
+    when batch*seq_len is large relative to weight size (see §Perf).
+    """
+    if mode == "fsdp":
+        return jax.tree_util.tree_map_with_path(
+            lambda path, leaf: _fsdp_leaf_spec(leaf.shape, mesh),
+            params_shape)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(path, leaf.shape, cfg, mesh),
+        params_shape)
+
+
+def _fsdp_leaf_spec(shape: tuple, mesh) -> P:
+    axes = tuple(mesh.axis_names)
+    total = 1
+    for a in axes:
+        total *= _axis(mesh, a)
+    parts = [None] * len(shape)
+    # largest dim divisible by the full device count gets all axes
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if _div(shape[i], total):
+            parts[i] = axes
+            return P(*parts)
+    # else: one axis on a divisible dim
+    for a in axes:
+        for i in order:
+            if _div(shape[i], _axis(mesh, a)):
+                parts[i] = a
+                return P(*parts)
+    return P(*parts)
+
+
+def zero1_spec(spec: P, shape: tuple, mesh) -> P:
+    """Add data-axes sharding to the first unsharded divisible dim (ZeRO-1).
+    Uses ALL non-model axes ("pod","data") so optimizer state is fully
+    sharded across pods too."""
+    dpx = data_axes(mesh)
+    d = 1
+    for a in dpx:
+        d *= _axis(mesh, a)
+    if d == 1:
+        return spec
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for p_ in parts:
+        if p_ is None:
+            continue
+        used.update(p_ if isinstance(p_, tuple) else (p_,))
+    if used & set(dpx):
+        return P(*parts)  # already data-sharded (e.g. FSDP expert weights)
+    for i, (p_, s_) in enumerate(zip(parts, shape)):
+        if p_ is None and _div(s_, d):
+            parts[i] = dpx if len(dpx) > 1 else dpx[0]
+            return P(*parts)
+    # fall back to "data" only (dim divisible by 16 but not 32)
+    dd = _axis(mesh, "data")
+    for i, (p_, s_) in enumerate(zip(parts, shape)):
+        if p_ is None and _div(s_, dd):
+            parts[i] = "data"
+            return P(*parts)
+    return P(*parts)
+
+
+def train_state_specs(cfg: ModelConfig, mesh, state_shape: PyTree) -> PyTree:
+    """Specs for {"params","master","m","v","step"}."""
+    p_specs = param_specs(cfg, mesh, state_shape["params"])
+    z = lambda tree_shape: jax.tree.map(
+        lambda spec, leaf: zero1_spec(spec, leaf.shape, mesh),
+        p_specs, tree_shape)
+    return {
+        "params": p_specs,
+        "master": z(state_shape["master"]),
+        "m": z(state_shape["m"]),
+        "v": z(state_shape["v"]),
+        "step": P(),
+    }
+
+
+# --------------------------------------------------------------------------
+# Batch / cache specs
+# --------------------------------------------------------------------------
+def batch_specs(cfg: ModelConfig, shape_cfg: ShapeConfig, mesh,
+                batch_shape: PyTree) -> PyTree:
+    dp = data_axes(mesh)
+    dp_size = int(np.prod([_axis(mesh, a) for a in dp])) if dp else 1
+
+    def spec_for(path, leaf):
+        b = leaf.shape[0]
+        lead = dp if _div(b, dp_size) else None
+        rest = [None] * (len(leaf.shape) - 1)
+        return P(lead, *rest)
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_shape)
+
+
+def cache_specs(cfg: ModelConfig, mesh, cache_shape: PyTree) -> PyTree:
+    """Decode/prefill cache specs.  Layout per leaf (see transformer.init_cache):
+    k/v: [n_blocks?, B, S, KV, hd]; rglru h: [n?, B, L], conv: [n?, B, W-1, L];
+    rwkv s: [n?, B, H, hd, hd], xtm/xcm: [n?, B, D]; enc k/v: [n, B, Te, KV, hd];
+    pos: scalar."""
+    dp = data_axes(mesh)
+    dp_size = int(np.prod([_axis(mesh, a) for a in dp])) if dp else 1
+    m = _axis(mesh, "model")
+
+    def spec_for(path, leaf):
+        keys = [getattr(p, "key", None) for p in path]
+        name = next((k for k in reversed(keys) if isinstance(k, str)), "")
+        shp = leaf.shape
+        if name == "pos" or len(shp) == 0:
+            return P()
+        stacked = any(k == "blocks" or k == "enc" for k in keys)
+        i0 = 1 if stacked else 0  # index of B dim
+
+        def dshard(sz):
+            return dp if _div(sz, dp_size) else None
+
+        parts = [None] * len(shp)
+        if name in ("k", "v"):
+            B, S = shp[i0], shp[i0 + 1]
+            parts[i0] = dshard(B)
+            if parts[i0] is None and _div(B, _axis(mesh, "data")):
+                parts[i0] = ("data",)
+            parts[i0 + 1] = "model" if _div(S, m) else None
+            return P(*parts)
+        if name == "h":
+            parts[i0] = dshard(shp[i0])
+            parts[i0 + 1] = "model" if _div(shp[i0 + 1], m) else None
+            return P(*parts)
+        if name == "conv":
+            parts[i0] = dshard(shp[i0])
+            parts[i0 + 2] = "model" if _div(shp[i0 + 2], m) else None
+            return P(*parts)
+        if name == "s":
+            parts[i0] = dshard(shp[i0])
+            parts[i0 + 1] = "model" if _div(shp[i0 + 1], m) else None
+            return P(*parts)
+        if name in ("xtm", "xcm"):
+            parts[i0] = dshard(shp[i0])
+            return P(*parts)
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shape)

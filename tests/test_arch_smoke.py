@@ -1,0 +1,111 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train step + prefill/decode on CPU; asserts output shapes and no NaNs.
+(The FULL configs are exercised only via the dry-run — no allocation.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_configs, get_config
+from repro.models import transformer as TF
+from repro.models.lm import (init_train_state, make_decode_step,
+                             make_prefill_step, make_train_step)
+from repro.optim import AdamWConfig
+
+ARCHS = sorted(all_configs())
+
+
+def _batch(cfg, B=2, T=32, key=None):
+    key = key or jax.random.key(0)
+    tokens = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
+    labels = jnp.where(jax.random.uniform(key, (B, T)) < 0.9, tokens, -1)
+    b = {"tokens": tokens, "labels": labels}
+    if cfg.frontend == "vision":
+        b["frontend"] = jax.random.normal(
+            key, (B, cfg.n_frontend_tokens, cfg.d_model))
+    elif cfg.frontend == "audio":
+        b["frontend"] = jax.random.normal(key, (B, cfg.encoder_seq,
+                                                cfg.d_model))
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch).reduced()
+    B, T = 2, 32
+    b = _batch(cfg, B, T)
+    params = TF.init_params(jax.random.key(0), cfg, dtype=jnp.float32)
+    logits, cache, aux = TF.forward(params, b["tokens"], cfg,
+                                    frontend_embeds=b.get("frontend"),
+                                    want_cache=True, q_chunk=8)
+    T_out = T + (cfg.n_frontend_tokens if cfg.frontend == "vision" else 0)
+    assert logits.shape == (B, T_out, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all())
+    assert int(cache["pos"]) == T_out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_decreases_loss(arch):
+    cfg = get_config(arch).reduced()
+    opt = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=20)
+    b = _batch(cfg)
+    state = init_train_state(jax.random.key(0), cfg, opt,
+                             param_dtype=jnp.float32)
+    step = jax.jit(make_train_step(cfg, opt, remat="full", q_chunk=8),
+                   donate_argnums=(0,))
+    state, m0 = step(state, b)
+    l0 = float(m0["loss"])
+    for _ in range(5):
+        state, m = step(state, b)
+    l1 = float(m["loss"])
+    assert np.isfinite(l0) and np.isfinite(l1)
+    assert l1 < l0, f"{arch}: loss did not decrease ({l0} -> {l1})"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_then_decode(arch):
+    cfg = get_config(arch).reduced()
+    B, T = 2, 32
+    b = _batch(cfg, B, T)
+    b.pop("labels")
+    params = TF.init_params(jax.random.key(0), cfg, dtype=jnp.float32)
+    prefill = jax.jit(make_prefill_step(cfg, q_chunk=8))
+    decode = jax.jit(make_decode_step(cfg))
+    cache, last = prefill(params, b)
+    assert bool(jnp.isfinite(last).all())
+    tok = jnp.argmax(last[:, :cfg.vocab_size], -1).astype(jnp.int32)[:, None]
+    for _ in range(4):
+        tok, cache = decode(params, cache, tok, jax.random.key(1))
+        assert tok.shape == (B, 1)
+        assert int(tok.min()) >= 0 and int(tok.max()) < cfg.vocab_size
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    """Teacher-forced decode over a short sequence must match the parallel
+    forward's logits (cache correctness)."""
+    cfg = get_config(arch).reduced()
+    if cfg.frontend is not None:
+        pytest.skip("frontend archs compare text-backbone only elsewhere")
+    if cfg.moe is not None:
+        # capacity drops make the parallel forward differ from 1-token
+        # decode by design; use a no-drop capacity factor for equivalence.
+        import dataclasses
+        from repro.configs.base import MoEConfig
+        cfg = dataclasses.replace(
+            cfg, moe=MoEConfig(cfg.moe.n_experts, cfg.moe.top_k,
+                               capacity_factor=8.0))
+    B, T = 1, 12
+    key = jax.random.key(3)
+    tokens = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
+    params = TF.init_params(jax.random.key(0), cfg, dtype=jnp.float32)
+    logits_fwd, _, _ = TF.forward(params, tokens, cfg, q_chunk=4)
+
+    cache = TF.init_cache(cfg, B, T, dtype=jnp.float32)
+    outs = []
+    for t in range(T):
+        lg, cache = TF.decode_step(params, cache, tokens[:, t:t + 1], cfg)
+        outs.append(lg)
+    logits_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_fwd), rtol=2e-2, atol=2e-2)

@@ -1,0 +1,120 @@
+"""Unit tests for the struct-context / for_save machinery (paper §5.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.context import ContextBank, ContextRecord, N_CTX
+from repro.core.preemption import for_save, run_to_completion
+
+
+def _sum_kernel(ctx, state, ints, floats):
+    """sum of i over [0, n) with checkpoint-at-i+1 (exactly-once)."""
+    n = ints[0]
+
+    def body(ctx, i, acc):
+        acc = acc + i
+        ctx = ctx.checkpoint(0, i + 1)
+        return ctx, acc
+
+    ctx, acc = for_save(ctx, 0, 0, n, 1, body, state)
+    done = ctx.intr == 0
+    ctx = jax.tree.map(lambda a, b: jnp.where(done, a, b), ctx.finish(), ctx)
+    return ctx, acc
+
+
+def _nested_kernel(ctx, state, ints, floats):
+    """acc += 1 for (k, r) in [0,K) x [0,R): tests nested for_save."""
+    K, R = ints[0], ints[1]
+
+    def inner(ctx, r, acc):
+        acc = acc + 1
+        ctx = ctx.checkpoint(1, r + 1)
+        return ctx, acc
+
+    def outer(ctx, k, acc):
+        ctx = ctx.checkpoint(0, k)
+        ctx, acc = for_save(ctx, 1, 0, R, 1, inner, acc)
+        adv = ctx.checkpoint(0, k + 1)
+        ok = ctx.intr == 0
+        ctx = jax.tree.map(lambda a, b: jnp.where(ok, a, b), adv, ctx)
+        return ctx, acc
+
+    ctx, acc = for_save(ctx, 0, 0, K, 1, outer, state)
+    done = ctx.intr == 0
+    ctx = jax.tree.map(lambda a, b: jnp.where(done, a, b), ctx.finish(), ctx)
+    return ctx, acc
+
+
+@pytest.mark.parametrize("budget", [1, 2, 3, 5, 100])
+def test_for_save_resume_equivalence(budget):
+    chunk = jax.jit(_sum_kernel)
+    n = 13
+    ints = jnp.asarray([n] + [0] * 7, jnp.int32)
+    floats = jnp.zeros((8,), jnp.float32)
+    ctx, acc, chunks = run_to_completion(
+        chunk, ContextRecord.fresh(), jnp.int32(0), ints, floats, budget)
+    assert int(acc) == n * (n - 1) // 2
+    assert int(ctx.done) == 1
+    expected_chunks = -(-n // budget)
+    assert chunks == expected_chunks
+
+
+@pytest.mark.parametrize("budget", [1, 2, 3, 4, 7, 1000])
+@pytest.mark.parametrize("K,R", [(3, 4), (2, 2), (1, 5), (4, 1)])
+def test_nested_for_save_all_budgets(budget, K, R):
+    """Regression: budget == inner-loop multiples must not livelock
+    (the 'inner completed exactly at budget boundary' case)."""
+    chunk = jax.jit(_nested_kernel)
+    ints = jnp.asarray([K, R] + [0] * 6, jnp.int32)
+    floats = jnp.zeros((8,), jnp.float32)
+    ctx, acc, chunks = run_to_completion(
+        chunk, ContextRecord.fresh(), jnp.int32(0), ints, floats, budget,
+        max_chunks=500)
+    assert chunks < 500, "livelock: kernel never finished"
+    # nested re-runs may double-count interrupted iterations only if the
+    # body is not idempotent; the counter kernel re-adds - so acc >= K*R is
+    # the weak bound, equality when budget covers whole inner loops.
+    assert int(ctx.done) == 1
+
+
+def test_checkpoint_clears_after_completion():
+    """A completed loop must clear its slot so re-entry restarts."""
+    def kern(ctx, state, ints, floats):
+        def body(ctx, i, s):
+            return ctx.checkpoint(0, i + 1), s + i
+        ctx, s = for_save(ctx, 0, 0, 5, 1, body, state)
+        return ctx.finish(), s
+
+    ctx, s = jax.jit(kern)(ContextRecord.fresh(budget=100), jnp.int32(0),
+                           jnp.zeros((8,), jnp.int32),
+                           jnp.zeros((8,), jnp.float32))
+    assert int(ctx.saved[0]) == 0
+    assert int(ctx.var[0]) == 0
+
+
+def test_context_bank_double_buffer_torn_write():
+    """The paper's `valid` flag: a commit interrupted mid-save must leave
+    the previous commit restorable."""
+    bank = ContextBank()
+    c1 = ContextRecord.fresh()
+    c1 = c1.checkpoint(0, 42)
+    bank.commit(c1, payload=("p1",))
+    bank.interrupt_next_commit = True  # async reset lands during the save
+    c2 = ContextRecord.fresh().checkpoint(0, 99)
+    bank.commit(c2, payload=("p2",))
+    got = bank.restore()
+    assert got is not None
+    assert int(got.context.var[0]) == 42  # previous commit still valid
+    assert got.payload == ("p1",)
+    # and a clean commit afterwards supersedes it
+    bank.commit(c2, payload=("p2",))
+    assert int(bank.restore().context.var[0]) == 99
+
+
+def test_context_record_pytree_roundtrip():
+    c = ContextRecord.fresh(budget=7).checkpoint(3, 11)
+    leaves, treedef = jax.tree.flatten(c)
+    c2 = jax.tree.unflatten(treedef, leaves)
+    assert int(c2.var[3]) == 11 and int(c2.budget) == 7
+    assert len(leaves) == 8

@@ -1,0 +1,119 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp ref."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.blur.ops import blur_block
+from repro.kernels.blur.ref import gaussian_blur_ref, median_blur_ref
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rglru_scan.ops import rglru_scan
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+from repro.kernels.rwkv6.ops import rwkv6
+from repro.kernels.rwkv6.ref import rwkv6_ref
+
+KEY = jax.random.key(7)
+
+
+# -- flash attention --------------------------------------------------------
+@pytest.mark.parametrize("B,H,KV,T,hd,win", [
+    (2, 4, 2, 256, 64, None),   # GQA
+    (1, 8, 8, 128, 128, None),  # MHA
+    (2, 4, 1, 256, 64, None),   # MQA
+    (1, 4, 2, 256, 64, 64),     # sliding window
+    (1, 4, 4, 256, 120, None),  # non-128 head dim (h2o-danube)
+    (1, 6, 6, 128, 32, None),   # whisper-ish
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, H, KV, T, hd, win, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, T, hd), dtype)
+    k = jax.random.normal(ks[1], (B, KV, T, hd), dtype)
+    v = jax.random.normal(ks[2], (B, KV, T, hd), dtype)
+    o = flash_attention(q, k, v, causal=True, window=win, bq=64, bk=64)
+    o_ref = attention_ref(q, k, v, causal=True, window=win)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+# -- decode attention -------------------------------------------------------
+@pytest.mark.parametrize("pos,win", [(5, None), (100, None), (128, None),
+                                     (200, None), (300, 32), (129, 64)])
+def test_decode_attention_ring_sweep(pos, win):
+    B, H, KV, S, hd = 2, 4, 2, 128, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, 1, hd))
+    kc = jax.random.normal(ks[1], (B, KV, S, hd))
+    vc = jax.random.normal(ks[2], (B, KV, S, hd))
+    o = decode_attention(q, kc, vc, pos, window=win, bk=64)
+    o_ref = decode_attention_ref(q, kc, vc, pos, window=win)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+# -- RG-LRU scan -------------------------------------------------------------
+@pytest.mark.parametrize("B,T,L", [(2, 64, 200), (1, 128, 128), (3, 33, 100)])
+def test_rglru_scan_sweep(B, T, L):
+    ks = jax.random.split(KEY, 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, T, L)))
+    b = jax.random.normal(ks[1], (B, T, L))
+    h0 = jax.random.normal(ks[2], (B, L))
+    hs, hT = rglru_scan(a, b, h0)
+    hs_r, hT_r = rglru_scan_ref(a, b, h0)
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(hs_r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hT_r), atol=1e-5)
+
+
+# -- RWKV-6 ------------------------------------------------------------------
+@pytest.mark.parametrize("B,T,H,hd", [(2, 48, 3, 16), (1, 64, 2, 32),
+                                      (2, 17, 4, 8)])
+def test_rwkv6_kernel_sweep(B, T, H, hd):
+    r, k, v = (jax.random.normal(jax.random.fold_in(KEY, i), (B, T, H, hd))
+               for i in range(3))
+    logw = -jnp.exp(jax.random.normal(jax.random.fold_in(KEY, 3),
+                                      (B, T, H, hd)) * 0.5 - 1)
+    u = jax.random.normal(jax.random.fold_in(KEY, 4), (H, hd)) * 0.1
+    o, s = rwkv6(r, k, v, logw, u)
+    o_r, s_r = rwkv6_ref(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_r), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_r), atol=1e-4)
+
+
+def test_rwkv6_chunked_equals_scan():
+    """The training-path chunked-parallel form == recurrent oracle."""
+    from repro.models.rwkv import rwkv_time_mix_chunked, rwkv_time_mix_scan
+    B, T, H, hd = 2, 50, 3, 16
+    r, k, v = (jax.random.normal(jax.random.fold_in(KEY, i), (B, T, H, hd))
+               for i in range(3))
+    logw = -jnp.exp(jax.random.normal(jax.random.fold_in(KEY, 3),
+                                      (B, T, H, hd)) * 0.5 - 1)
+    u = jax.random.normal(jax.random.fold_in(KEY, 4), (H, hd)) * 0.1
+    o1, s1 = rwkv_time_mix_scan(r, k, v, logw, u)
+    o2, s2 = rwkv_time_mix_chunked(r, k, v, logw, u, chunk=16)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=3e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=3e-4)
+
+
+# -- blur --------------------------------------------------------------------
+@pytest.mark.parametrize("kind", ["median", "gaussian"])
+@pytest.mark.parametrize("rb,w", [(32, 128), (16, 256), (8, 128)])
+def test_blur_block_sweep(kind, rb, w, rng):
+    block = jnp.asarray(rng.random((rb + 2, w + 2), dtype=np.float32))
+    out = blur_block(block, kind)
+    ref_fn = median_blur_ref if kind == "median" else gaussian_blur_ref
+    ref = ref_fn(block)[1:-1, 1:-1]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+
+def test_median9_is_exact_median(rng):
+    from repro.kernels.blur.kernel import median9
+    vals = [jnp.asarray(rng.random((5, 7), dtype=np.float32))
+            for _ in range(9)]
+    got = median9(vals)
+    want = np.median(np.stack([np.asarray(v) for v in vals]), axis=0)
+    np.testing.assert_allclose(np.asarray(got), want, atol=0)

@@ -1,0 +1,124 @@
+"""End-to-end behaviour of the paper's system: Controller API, preemptive
+scheduling with priorities, partial vs full reconfiguration, service-time
+behaviour (paper §6 qualitative claims at test scale)."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.controller.controller import Controller
+from repro.controller.hittile import HitTile
+from repro.controller.kernels import get_kernel, kernel_names
+from repro.core.scheduler import Scheduler, SchedulerConfig
+from repro.core.shell import Shell
+from repro.core.task import TaskStatus, generate_random_tasks
+from repro.kernels.blur.ref import iterated_blur_ref
+from repro.kernels.blur.tasks import make_image
+
+SIZE = 30
+
+
+def test_kernel_registry_has_paper_task_set():
+    names = kernel_names()
+    assert "MedianBlur" in names and "GaussianBlur" in names
+    kd = get_kernel("MedianBlur")
+    assert kd.int_args == ("H", "W", "iters")
+    # the uniform ABI pads to fixed widths (paper Listing 1.2)
+    b = kd.bundle(np.zeros((4, 4), np.float32), np.zeros((4, 4), np.float32),
+                  H=2, W=2, iters=1)
+    bufs, ints, floats = b.padded()
+    assert len(bufs) == 4 and ints.shape == (8,) and floats.shape == (8,)
+
+
+def test_controller_end_to_end():
+    rng = np.random.default_rng(0)
+    img = make_image(rng, SIZE)
+    shell = Shell(n_regions=2, chunk_budget=4)
+    ctrl = Controller(shell)
+    t1 = ctrl.launch("MedianBlur",
+                     (HitTile.of(img), HitTile.zeros(img.shape)),
+                     priority=1, H=SIZE, W=SIZE, iters=2)
+    t2 = ctrl.launch("GaussianBlur",
+                     (HitTile.of(img), HitTile.zeros(img.shape)),
+                     priority=3, H=SIZE, W=SIZE, iters=1)
+    rep = ctrl.run(quiet=True)
+    ctrl.shutdown()
+    assert rep["n_done"] == 2
+    assert t1.status == TaskStatus.DONE and t2.status == TaskStatus.DONE
+    ref = np.asarray(iterated_blur_ref(jnp.asarray(img), 2, "median"))
+    np.testing.assert_allclose(t1.result[0], ref, atol=1e-5)
+
+
+def _run_soup(preemption: bool, seed: int = 15, n_tasks: int = 12,
+              n_regions: int = 2, rate: float = 0.3,
+              slowdown: float = 0.01):
+    rng = np.random.default_rng(seed)
+
+    def arg_factory(r, k):
+        img = make_image(r, SIZE)
+        kd = get_kernel(k)
+        return kd.bundle(img, np.zeros_like(img), H=SIZE, W=SIZE,
+                         iters=int(r.integers(1, 4)))
+
+    tasks = generate_random_tasks(rng, ["MedianBlur", "GaussianBlur"],
+                                  n_tasks, rate, arg_factory)
+    shell = Shell(n_regions=n_regions, chunk_budget=2)
+    for r_ in shell.regions:
+        r_.slowdown_s = slowdown  # make tasks long enough to contend
+    sched = Scheduler(shell, SchedulerConfig(preemption=preemption))
+    rep = sched.run(tasks, quiet=True)
+    shell.shutdown()
+    return rep, tasks
+
+
+def test_preemption_reduces_urgent_service_time():
+    """Paper Fig. 3 (qualitative): with preemption, high-priority tasks are
+    served sooner on average than without."""
+    rep_np, tasks_np = _run_soup(False)
+    rep_p, tasks_p = _run_soup(True)
+    assert rep_np["n_done"] == rep_p["n_done"]
+    assert rep_p["preemptions"] > 0, "scenario generated no preemptions"
+
+    def urgent_mean(tasks):
+        st = [t.service_time for t in tasks if t.priority <= 1]
+        return np.mean(st) if st else 0.0
+
+    # preemptive urgent service-time should not be (much) worse
+    assert urgent_mean(tasks_p) <= urgent_mean(tasks_np) * 1.5
+
+
+def test_reconfiguration_cache_hits():
+    """Repeated kernels on the same region geometry must hit the executable
+    cache ('partial bitstream already generated')."""
+    rep, _ = _run_soup(True, seed=3, n_tasks=10)
+    assert rep["cache_hits"] > 0
+    assert rep["cold_compiles"] <= 4  # 2 kernels x <=2 signatures
+
+
+def test_full_reconfig_mode_slower_than_partial():
+    """Paper §6.3: full reconfiguration stalls the fabric; with simulated
+    bitstream load times (0.22s vs 0.07s) throughput must drop."""
+    rng = np.random.default_rng(15)
+
+    def arg_factory(r, k):
+        img = make_image(r, SIZE)
+        kd = get_kernel(k)
+        return kd.bundle(img, np.zeros_like(img), H=SIZE, W=SIZE, iters=1)
+
+    def run(full_mode):
+        tasks = generate_random_tasks(
+            np.random.default_rng(15), ["MedianBlur", "GaussianBlur"], 8,
+            0.05, arg_factory)
+        shell = Shell(n_regions=2, chunk_budget=8,
+                      simulate_partial_s=0.0 if full_mode else 0.01,
+                      simulate_full_s=0.03 if full_mode else 0.0)
+        sched = Scheduler(shell, SchedulerConfig(
+            preemption=False, full_reconfig_mode=full_mode))
+        rep = sched.run(tasks, quiet=True)
+        shell.shutdown()
+        return rep
+
+    rep_partial = run(False)
+    rep_full = run(True)
+    assert rep_full["full_reconfigs"] > 0
+    assert rep_partial["throughput_tps"] > rep_full["throughput_tps"]
