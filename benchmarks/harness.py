@@ -54,7 +54,8 @@ def _arg_factory(size):
 def run_cell(*, size: int, rate: str, n_regions: int, preemption: bool,
              seed: int = SEED, n_tasks: int = N_TASKS,
              full_reconfig: bool = False, slowdown: float = SLOWDOWN_S,
-             chunk_budget: int = 2) -> dict:
+             chunk_budget: int = 2, prefetch: bool = True,
+             prewarm: bool = True) -> dict:
     rng = np.random.default_rng(seed)
     tasks_raw = generate_random_tasks(
         rng, KERNELS, n_tasks, RATES[rate], _arg_factory(size))
@@ -63,10 +64,15 @@ def run_cell(*, size: int, rate: str, n_regions: int, preemption: bool,
         t.kernel = KERNEL_DEFS[t.kernel][0]
     shell = Shell(n_regions=n_regions, chunk_budget=chunk_budget,
                   simulate_partial_s=PARTIAL_S,
-                  simulate_full_s=0.22 if full_reconfig else 0.0)
-    for kname in ("MedianBlur", "GaussianBlur"):
-        shell.engine.prewarm(kname, tasks_raw[0].args,
-                             shell.regions[0].geometry)
+                  simulate_full_s=0.22 if full_reconfig else 0.0,
+                  prefetch=prefetch)
+    if prewarm:
+        # keep the paper-comparable cells free of compile noise: both
+        # kernels' bitstreams exist up front (the prefetcher then only
+        # covers signature/geometry variants)
+        for kname in ("MedianBlur", "GaussianBlur"):
+            shell.engine.prewarm(kname, tasks_raw[0].args,
+                                 shell.regions[0].geometry)
     for r in shell.regions:
         r.slowdown_s = slowdown
     sched = Scheduler(shell, SchedulerConfig(
@@ -76,7 +82,8 @@ def run_cell(*, size: int, rate: str, n_regions: int, preemption: bool,
     shell.shutdown()
     rep["cfg"] = {"size": size, "rate": rate, "n_regions": n_regions,
                   "preemption": preemption, "full_reconfig": full_reconfig,
-                  "seed": seed, "chunk_budget": chunk_budget}
+                  "seed": seed, "chunk_budget": chunk_budget,
+                  "prefetch": prefetch}
     rep["wall_total_s"] = time.perf_counter() - t0
     rep["service_times"] = {
         t.tid: {"priority": t.priority, "service_s": t.service_time,

@@ -32,6 +32,8 @@ def main() -> None:
     # reconfiguration costs (paper §6.3 partial-vs-full)
     from benchmarks import bench_reconfig
     bench_reconfig.measure()
+    # async bitstream prefetch vs synchronous baseline
+    bench_reconfig.measure_prefetch()
 
     # the paper's scheduler experiments
     from benchmarks import bench_overhead, bench_service_time, bench_throughput

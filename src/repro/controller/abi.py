@@ -29,6 +29,9 @@ class ArgBundle:
     bufs: Tuple[Any, ...] = ()
     ints: Tuple[int, ...] = ()
     floats: Tuple[float, ...] = ()
+    # memoized signature: it is read on every scheduler dispatch/affinity
+    # check and prefetch hint, and the shapes never change after creation
+    _sig: Optional[tuple] = field(default=None, repr=False, compare=False)
 
     def padded(self):
         bufs = list(self.bufs)[:N_BUF_SLOTS]
@@ -44,8 +47,11 @@ class ArgBundle:
     def signature(self) -> tuple:
         """Shape/dtype signature — the 'interface' a region must be
         configured for (kernel + signature = one executable)."""
-        bufs, ints, floats = self.padded()
-        return tuple((tuple(b.shape), jnp.asarray(b).dtype.name) for b in bufs)
+        if self._sig is None:
+            bufs, _, _ = self.padded()
+            self._sig = tuple((tuple(b.shape), jnp.asarray(b).dtype.name)
+                              for b in bufs)
+        return self._sig
 
 
 def abi_signature(bundle: ArgBundle) -> tuple:

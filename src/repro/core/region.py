@@ -37,6 +37,7 @@ class RegionStats:
     preemptions: int = 0
     chunk_ewma_s: float = 0.0
     busy_s: float = 0.0
+    reconfig_s: float = 0.0  # wall time this region spent reconfiguring
 
 
 class Region:
@@ -173,7 +174,6 @@ class Region:
 
     def _do_reconfig(self, task: Task):
         self._check_failure()
-        kd = get_kernel(task.kernel)
         key = (task.kernel, task.args.signature(), self.geometry)
         if self.loaded == key:
             return
@@ -183,6 +183,7 @@ class Region:
         self.loaded = key
         self.executable = fn
         self.stats.reconfigs += 1
+        self.stats.reconfig_s += dt
         task.n_reconfigs += 1
         self.interrupts.raise_interrupt(Event(
             EventKind.RECONFIG_DONE, self.rid, task=task, payload=dt))

@@ -13,9 +13,8 @@ Serve steps (paper):
 from __future__ import annotations
 
 import bisect
-import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional
 
 from repro.core.interrupts import Event, EventKind
@@ -38,6 +37,15 @@ class SchedulerConfig:
     repair_after_s: Optional[float] = None
     checkpoint_path: Optional[str] = None  # periodic scheduler checkpoints
     checkpoint_every_s: float = 5.0
+    # async bitstream prefetch: every task entering a priority queue is
+    # hinted to the shell's background prefetcher, which generates its
+    # bitstream off the dispatch path (the paper's latency-hiding §4.2).
+    # None (default) follows Shell(prefetch=...), the single source of
+    # truth; an explicit True/False here overrides it for this scheduler.
+    prefetch: Optional[bool] = None
+    # prefer dispatching to an idle region whose loaded bitstream already
+    # matches the task (saves the partial reconfiguration entirely).
+    bitstream_affinity: bool = True
 
 
 class Scheduler:
@@ -62,6 +70,23 @@ class Scheduler:
         q = self.queues[task.priority]
         # FCFS within a priority: keep sorted by arrival time
         bisect.insort(q, task, key=lambda t: t.arrival_time)
+        self._hint_prefetch(task)
+
+    def _hint_prefetch(self, task: Task):
+        """Queue lookahead -> background bitstream generation (§4.2): warm
+        the task's bitstream for every geometry it could dispatch to while
+        it waits in the priority queue."""
+        prefetcher = getattr(self.shell, "prefetcher", None)
+        if prefetcher is None:
+            return
+        enabled = self.cfg.prefetch
+        if enabled is None:
+            enabled = self.shell.prefetch_enabled
+        if not enabled:
+            return
+        if not prefetcher.alive:  # lazy: the worker starts with the first
+            prefetcher.start()    # hint, never idles in unscheduled shells
+        prefetcher.submit(task, self.shell.geometries())
 
     # ------------------------------------------------------------------
     def run(self, tasks_to_arrive: List[Task], quiet: bool = True) -> dict:
@@ -153,7 +178,7 @@ class Scheduler:
             q = self.queues[prio]
             while q:
                 task = q[0]
-                region = self._find_idle_region()
+                region = self._find_idle_region(task)
                 if region is not None:
                     q.pop(0)
                     self._dispatch(region, task, quiet)
@@ -166,11 +191,20 @@ class Scheduler:
                 # nothing (more) to do at this priority now
                 break
 
-    def _find_idle_region(self) -> Optional[Region]:
+    def _find_idle_region(self, task: Optional[Task] = None
+                          ) -> Optional[Region]:
+        """First idle region — preferring one whose loaded bitstream already
+        matches ``task`` (affinity skips the partial reconfiguration)."""
+        best = None
         for r in self.shell.regions:
             if r.alive and r.idle and r.rid not in self._preempt_pending:
-                return r
-        return None
+                if (task is not None and self.cfg.bitstream_affinity
+                        and r.loaded == (task.kernel, task.args.signature(),
+                                         r.geometry)):
+                    return r
+                if best is None:
+                    best = r
+        return best
 
     def _find_lower_priority_victim(self, prio: int) -> Optional[Region]:
         """Region running a STRICTLY lower-priority task (highest numeric
@@ -268,6 +302,16 @@ class Scheduler:
             }
         span = max((t.t_done for t in tasks if t.t_done), default=self.t0)
         wall = max(span - self.t0, 1e-9)
+        es = self.shell.engine.stats
+        # nested detail carries only what the top-level keys don't: one
+        # source of truth per number (the two are sampled at different
+        # moments and could otherwise disagree within one report)
+        detail = self.shell.reconfig_report()
+        for dup in ("partial_loads", "cache_hits", "cold_compiles",
+                    "prefetch_compiles", "prefetch_hits",
+                    "prefetch_hit_rate", "prefetch_stale_drops",
+                    "evictions", "full_reconfigs", "total_stall_s"):
+            detail.pop(dup, None)
         return {
             "n_done": len(tasks),
             "wall_s": wall,
@@ -275,8 +319,15 @@ class Scheduler:
             "service_by_priority": per_prio,
             "preemptions": sum(t.n_preemptions for t in tasks),
             "migrations": sum(t.n_migrations for t in tasks),
-            "reconfigs": self.shell.engine.stats.partial_loads,
-            "full_reconfigs": self.shell.engine.stats.full_reconfigs,
-            "cache_hits": self.shell.engine.stats.cache_hits,
-            "cold_compiles": self.shell.engine.stats.cold_compiles,
+            "reconfigs": es.partial_loads,
+            "full_reconfigs": es.full_reconfigs,
+            "cache_hits": es.cache_hits,
+            "cold_compiles": es.cold_compiles,
+            "prefetch_compiles": es.prefetch_compiles,
+            "prefetch_hits": es.prefetch_hits,
+            "prefetch_hit_rate": es.prefetch_hit_rate(),
+            "prefetch_stale_drops": es.prefetch_stale_drops,
+            "evictions": es.evictions,
+            "dispatch_stall_s": es.total_stall_s,
+            "reconfig": detail,
         }

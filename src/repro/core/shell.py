@@ -6,16 +6,19 @@ On a real pod the shell slices the device grid into disjoint sub-meshes
 (``make_region_mesh``); on this CPU container regions may share the single
 CpuDevice (``allow_overlap=True``), time-multiplexed — DESIGN.md §2.1(5).
 The number of regions is the shell build parameter (the TCL script input).
+
+The shell also owns the reconfiguration plumbing shared by all regions: the
+``ReconfigEngine`` (LRU bitstream cache + single ICAP port) and the
+``BitstreamPrefetcher`` that generates bitstreams off the dispatch path.
 """
 from __future__ import annotations
 
-import threading
 from typing import List, Optional
 
 import jax
-import numpy as np
 
 from repro.core.interrupts import InterruptController
+from repro.core.prefetch import BitstreamPrefetcher
 from repro.core.reconfig import ReconfigEngine
 from repro.core.region import Region
 
@@ -25,11 +28,19 @@ class Shell:
                  allow_overlap: bool = True,
                  chunk_budget: Optional[int] = None,
                  simulate_partial_s: float = 0.0,
-                 simulate_full_s: float = 0.0):
+                 simulate_full_s: float = 0.0,
+                 cache_capacity: Optional[int] = None,
+                 prefetch: bool = True,
+                 prefetch_max_queue: int = 64):
         self.devices = list(devices if devices is not None else jax.devices())
         self.interrupts = InterruptController()
         self.engine = ReconfigEngine(simulate_partial_s=simulate_partial_s,
-                                     simulate_full_s=simulate_full_s)
+                                     simulate_full_s=simulate_full_s,
+                                     cache_capacity=cache_capacity)
+        # the worker thread starts lazily with the scheduler's first hint
+        self.prefetcher = BitstreamPrefetcher(
+            self.engine, max_queue=prefetch_max_queue, auto_start=False)
+        self.prefetch_enabled = prefetch
         self.regions: List[Region] = []
 
         n_dev = len(self.devices)
@@ -68,8 +79,29 @@ class Shell:
         self.regions[rid].request_preempt()
 
     def shutdown(self):
+        self.prefetcher.stop()
         for r in self.regions:
             r.shutdown()
 
     def alive_regions(self) -> List[Region]:
         return [r for r in self.regions if r.alive]
+
+    def geometries(self) -> List[tuple]:
+        """Distinct geometries of alive regions (prefetch targets)."""
+        return list(dict.fromkeys(r.geometry for r in self.alive_regions()))
+
+    def reconfig_report(self) -> dict:
+        """Engine + prefetcher + per-region reconfiguration statistics."""
+        rep = self.engine.report()
+        rep["prefetcher"] = {
+            "enabled": self.prefetch_enabled,
+            "submitted": self.prefetcher.stats.submitted,
+            "processed": self.prefetcher.stats.processed,
+            "dropped_full": self.prefetcher.stats.dropped_full,
+        }
+        rep["regions"] = {
+            r.rid: {"reconfigs": r.stats.reconfigs,
+                    "reconfig_s": r.stats.reconfig_s}
+            for r in self.regions
+        }
+        return rep

@@ -1,7 +1,16 @@
-"""Serving driver: prefill a batch of prompts, then greedy-decode.
+"""Serving drivers.
+
+LM mode — prefill a batch of prompts, then greedy-decode:
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \
         --prompt-len 32 --gen 16
+
+Scheduler mode — serve a random kernel-task stream through the preemptive
+scheduler (paper §6 setup) and report the reconfiguration pipeline's health:
+prefetch hit rate, dispatch stall time, cache evictions:
+
+    PYTHONPATH=src python -m repro.launch.serve --mode scheduler \
+        --n-tasks 16 --regions 2 [--no-prefetch]
 """
 from __future__ import annotations
 
@@ -56,14 +65,64 @@ def serve(cfg, *, batch: int = 4, prompt_len: int = 32, gen: int = 16,
     return toks
 
 
+def serve_task_stream(*, n_tasks: int = 16, n_regions: int = 2,
+                      size: int = 48, rate_s: float = 1.0, seed: int = 0,
+                      prefetch: bool = True,
+                      cache_capacity: int = None, quiet: bool = False) -> dict:
+    """Serve a random blur-task stream through the preemptive scheduler and
+    return its report, including the async-reconfiguration statistics."""
+    from repro.controller.kernels import get_kernel
+    from repro.core.scheduler import Scheduler, SchedulerConfig
+    from repro.core.shell import Shell
+    from repro.core.task import generate_random_tasks
+    from repro.kernels.blur.tasks import make_image
+
+    rng = np.random.default_rng(seed)
+
+    def arg_factory(r, k):
+        img = make_image(r, size)
+        kd = get_kernel(k)
+        return kd.bundle(img, np.zeros_like(img), H=size, W=size,
+                         iters=int(r.integers(1, 3)))
+
+    tasks = generate_random_tasks(rng, ["MedianBlur", "GaussianBlur"],
+                                  n_tasks, rate_s, arg_factory)
+    shell = Shell(n_regions=n_regions, chunk_budget=2, prefetch=prefetch,
+                  cache_capacity=cache_capacity)
+    sched = Scheduler(shell, SchedulerConfig())
+    rep = sched.run(tasks, quiet=True)
+    shell.shutdown()
+    if not quiet:
+        print(f"[serve] {rep['n_done']}/{n_tasks} tasks in "
+              f"{rep['wall_s']:.2f}s ({rep['throughput_tps']:.1f} tasks/s), "
+              f"{rep['preemptions']} preemptions")
+        print(f"[serve] reconfig: {rep['reconfigs']} partial loads, "
+              f"prefetch hit rate {rep['prefetch_hit_rate']:.0%}, "
+              f"{rep['cold_compiles']} cold compiles "
+              f"({rep['dispatch_stall_s']:.2f}s dispatch stall), "
+              f"{rep['evictions']} evictions, "
+              f"{rep['prefetch_stale_drops']} stale prefetches dropped")
+    return rep
+
+
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("lm", "scheduler"), default="lm")
     ap.add_argument("--arch", default="qwen3-8b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--n-tasks", type=int, default=16)
+    ap.add_argument("--regions", type=int, default=2)
+    ap.add_argument("--no-prefetch", action="store_true")
+    ap.add_argument("--cache-capacity", type=int, default=None)
     args = ap.parse_args()
+    if args.mode == "scheduler":
+        serve_task_stream(n_tasks=args.n_tasks, n_regions=args.regions,
+                          prefetch=not args.no_prefetch,
+                          cache_capacity=args.cache_capacity)
+        return
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()

@@ -24,6 +24,24 @@ from repro.models import rwkv as RW
 PyTree = Any
 
 
+@jax.custom_vjp
+def _grad_transparent_barrier(x):
+    """optimization_barrier that differentiates as identity (the primitive
+    has no differentiation rule on this JAX version)."""
+    return jax.lax.optimization_barrier(x)
+
+
+def _gtb_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _gtb_bwd(_, g):
+    return (g,)
+
+
+_grad_transparent_barrier.defvjp(_gtb_fwd, _gtb_bwd)
+
+
 # ==========================================================================
 # Structure helpers
 # ==========================================================================
@@ -495,7 +513,7 @@ def forward(params, tokens, cfg: ModelConfig, *, mesh=None,
         # barrier: keeps the bf16->f32 casts of the (checkpoint-saved)
         # residual stream inside the recompute, so XLA cannot hoist an f32
         # copy of the whole saved stack out of the backward loop.
-        x = jax.lax.optimization_barrier(x)
+        x = _grad_transparent_barrier(x)
         new_caches = {}
         for i, kind in enumerate(pat):
             sl = slices[slot_name(i, kind)]

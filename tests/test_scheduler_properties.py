@@ -2,6 +2,8 @@
 preemption machinery's end-to-end correctness."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # degrade, don't error, without the dep
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

@@ -3,6 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # degrade, don't error, without the dep
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

@@ -112,6 +112,12 @@ def test_full_reconfig_mode_slower_than_partial():
         shell = Shell(n_regions=2, chunk_budget=8,
                       simulate_partial_s=0.0 if full_mode else 0.01,
                       simulate_full_s=0.03 if full_mode else 0.0)
+        # prewarm both bitstreams: the comparison is about load policy
+        # (partial vs full), not compile noise, which otherwise lands on
+        # whichever mode runs first in a cold process
+        for kname in ("MedianBlur", "GaussianBlur"):
+            shell.engine.prewarm(kname, tasks[0].args,
+                                 shell.regions[0].geometry)
         sched = Scheduler(shell, SchedulerConfig(
             preemption=False, full_reconfig_mode=full_mode))
         rep = sched.run(tasks, quiet=True)
