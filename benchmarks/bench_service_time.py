@@ -1,6 +1,11 @@
 """Paper Fig. 3: service time per priority queue, +-preemption, 1 vs 2 RRs,
-three arrival rates (largest size, 30 tasks)."""
+three arrival rates (largest size, 30 tasks) — plus a policy arm comparing
+fcfs vs edf vs wfq on the same task stream (p50/p99 turnaround, deadline
+misses, fairness)."""
 from __future__ import annotations
+
+import json
+import os
 
 import numpy as np
 
@@ -52,3 +57,70 @@ def emit(sweep, printer=print):
     mn = np.mean([r["mean_service_s"] for r in urgent_nop if r["n"]])
     printer(f"fig3/urgent_speedup_busy,{mp*1e6:.0f},"
             f"nonpreemptive_us={mn*1e6:.0f};speedup={mn/max(mp,1e-9):.2f}x")
+
+
+# ------------------------------------------------------------- policies
+def run_policy_cell(policy: str, *, n_tasks: int = 18, n_regions: int = 2,
+                    size: int = 128, rate_s: float = 1.0, seed: int = 7,
+                    slowdown: float = 0.02) -> dict:
+    """One policy arm: the SAME seeded task stream (2 tenants, deadlines)
+    served under ``policy``; returns the scheduler report."""
+    from repro.controller.kernels import get_kernel
+    from repro.core.scheduler import Scheduler, SchedulerConfig
+    from repro.core.shell import Shell
+    from repro.core.task import generate_random_tasks
+    from repro.kernels.blur.tasks import make_image
+
+    rng = np.random.default_rng(seed)
+
+    def arg_factory(r, k):
+        img = make_image(r, size)
+        kd = get_kernel(k)
+        return kd.bundle(img, np.zeros_like(img), H=size, W=size, iters=1)
+
+    tasks = generate_random_tasks(
+        rng, ["MedianBlur", "GaussianBlur"], n_tasks, rate_s, arg_factory,
+        tenants=["tenantA", "tenantB"], deadline_slack=(0.5, 2.0))
+    shell = Shell(n_regions=n_regions, chunk_budget=2)
+    for kname in ("MedianBlur", "GaussianBlur"):
+        shell.engine.prewarm(kname, tasks[0].args,
+                             shell.regions[0].geometry)
+    for r in shell.regions:
+        r.slowdown_s = slowdown
+    sched = Scheduler(shell, SchedulerConfig(policy=policy))
+    rep = sched.run(tasks, quiet=True)
+    shell.shutdown()
+    rep["cfg"] = {"policy": policy, "n_tasks": n_tasks,
+                  "n_regions": n_regions, "size": size, "rate": rate_s,
+                  "seed": seed}
+    return rep
+
+
+def measure_policies(printer=print, cache_path: str = "bench_policies.json",
+                     use_cache: bool = True, **cell_kwargs):
+    """fcfs vs edf vs wfq on one identical stream: p50/p99 turnaround,
+    deadline misses, fairness ratio; cached into the benchmark JSON."""
+    if use_cache and os.path.exists(cache_path):
+        with open(cache_path) as f:
+            results = json.load(f)
+    else:
+        results = [run_policy_cell(p, **cell_kwargs)
+                   for p in ("fcfs", "edf", "wfq")]
+        keep = ("cfg", "policy", "n_done", "wall_s", "throughput_tps",
+                "turnaround_p50_s", "turnaround_p99_s", "deadline_tasks",
+                "deadline_misses", "per_tenant", "fairness_ratio",
+                "preemptions")
+        results = [{k: r[k] for k in keep} for r in results]
+        with open(cache_path, "w") as f:
+            json.dump(results, f)
+    printer("# policy arm: fcfs vs edf vs wfq on the same stream "
+            "(name,us_per_call,derived)")
+    for r in results:
+        printer(f"policy/{r['policy']}_turnaround,"
+                f"{r['turnaround_p50_s']*1e6:.0f},"
+                f"p99_us={r['turnaround_p99_s']*1e6:.0f};"
+                f"deadline_miss={r['deadline_misses']}/"
+                f"{r['deadline_tasks']};"
+                f"fairness={r['fairness_ratio']:.2f};"
+                f"n_done={r['n_done']};preempt={r['preemptions']}")
+    return results

@@ -40,6 +40,13 @@ def main() -> None:
     from benchmarks.harness import full_sweep
     import os
 
+    # scheduling-policy arm (fcfs vs edf vs wfq on one stream); like the
+    # sweep, fast mode only reports it when already cached
+    if args.fast and not os.path.exists("bench_policies.json"):
+        print("policy/skipped,0,fast-mode")
+    else:
+        bench_service_time.measure_policies(use_cache=not args.no_cache)
+
     if args.fast and not os.path.exists("bench_sweep.json"):
         print("sweep/skipped,0,fast-mode")
         return

@@ -6,8 +6,14 @@ paper's FPGA scheduler targets, at LM scale.
 The training job is wrapped as a Controller kernel whose context checkpoints
 (step counter) live in the region bank; each chunk = `budget` training steps.
 
+This example drives the *online* scheduler API: ``Scheduler.run_forever()``
+serves from a background thread while the client submits live through
+``Scheduler.submit()`` and waits on the returned ``TaskHandle`` futures —
+no workload is handed over up front.
+
     PYTHONPATH=src python examples/multi_tenant_serve.py
 """
+import threading
 import time
 
 import jax
@@ -99,27 +105,46 @@ def main():
     shell = Shell(n_regions=2, chunk_budget=2)
     sched = Scheduler(shell, SchedulerConfig(preemption=True))
 
+    # serve live: the scheduler loop runs in the background, clients submit
+    server = threading.Thread(target=sched.run_forever,
+                              name="scheduler-loop", daemon=True)
+    server.start()
+    sched.wait_until_serving(timeout=10.0)
+
+    t0 = time.time()
     train_task = Task(
         kernel="TrainLM",
         args=ArgBundle(bufs=tuple(np.asarray(x) for x in _LEAVES0),
                        ints=(12,)),
-        priority=4, arrival_time=0.0)
+        priority=4, tenant="training")
+    train_handle = sched.submit(train_task)
+
     prompts = np.asarray(DATA.batch(3)["tokens"][:, :32])
     p_leaves = tuple(np.asarray(x)
                      for x in jax.tree.leaves(_STATE0["params"]))
-    serve_tasks = [
-        Task(kernel="ServeLM",
-             args=ArgBundle(bufs=(prompts,) + p_leaves, ints=()),
-             priority=0, arrival_time=0.3 + 0.3 * i)
-        for i in range(3)
-    ]
+    serve_handles = []
+    for i in range(3):
+        time.sleep(0.3)  # serving requests trickle in while training runs
+        h = sched.submit(Task(
+            kernel="ServeLM",
+            args=ArgBundle(bufs=(prompts,) + p_leaves, ints=()),
+            priority=0, tenant="serving"))
+        serve_handles.append(h)
 
-    t0 = time.time()
-    rep = sched.run([train_task] + serve_tasks, quiet=False)
+    for i, h in enumerate(serve_handles):
+        logits = h.result(timeout=300.0)[0]
+        print(f"[client] serve request {i} done "
+              f"(status={h.status.value}, logits {logits.shape})")
+    train_handle.result(timeout=300.0)
+
+    rep = sched.drain(timeout=60.0)
+    server.join(timeout=10.0)
     shell.shutdown()
     print("\n--- multi-tenant report ---")
     print(f"done={rep['n_done']} preemptions={rep['preemptions']} "
-          f"wall={time.time()-t0:.1f}s")
+          f"wall={time.time()-t0:.1f}s "
+          f"per-tenant={ {k: v['n'] for k, v in rep['per_tenant'].items()} } "
+          f"stranded={rep['stranded_handles']}")
     print(f"training was preempted {train_task.n_preemptions}x by serving "
           f"requests and still completed (final step counter in context)")
 

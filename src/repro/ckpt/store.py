@@ -126,11 +126,12 @@ def save_scheduler_checkpoint(path: str, scheduler):
     state = {
         "queued": [
             {"tid": t.tid, "kernel": t.kernel, "priority": t.priority,
-             "arrival_time": t.arrival_time,
+             "tenant": t.tenant, "arrival_time": t.arrival_time,
              "n_preemptions": t.n_preemptions,
              "has_context": t.saved_context is not None}
-            for q in scheduler.queues for t in q
+            for t in scheduler.policy.pending_tasks()
         ],
+        "policy": scheduler.policy.name,
         "finished": len(scheduler.finished),
         "t": time.time(),
     }

@@ -243,6 +243,7 @@ class Region:
                 dt if self.stats.chunks == 0
                 else a * dt + (1 - a) * self.stats.chunk_ewma_s)
             self.stats.chunks += 1
+            task.run_s += dt  # per-task (and per-tenant) work attribution
 
             if done:
                 task.status = TaskStatus.DONE

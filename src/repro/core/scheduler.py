@@ -1,25 +1,41 @@
-"""FCFS preemptive scheduler with priority queues — Algorithm 1 (paper §4.3),
-plus production extensions: straggler mitigation (chunk-latency EWMA ->
-preempt & migrate), elastic region failure/repair, and checkpoint/restart of
-the whole scheduler state (ckpt/).
+"""Preemptive scheduler event loop, decomposed into three layers:
+
+- **Policy** (``core/policy.py``): the queue discipline — which task runs
+  next, which running task to preempt, which queued tasks to prefetch
+  bitstreams for.  ``FcfsPriority`` is the paper's Algorithm 1 (§4.3) and
+  stays the default; ``edf`` and ``wfq`` are drop-in alternatives.
+- **Admission** (``core/submit.py``): ``submit(task) -> TaskHandle`` from
+  any thread, ``run_forever()`` serving live traffic, graceful
+  ``drain()``/``shutdown()``.  The paper's batch ``run(tasks_to_arrive)``
+  is a compatibility wrapper that replays arrivals through ``submit()``.
+- **Event loop** (this module): arrivals, dispatch, preemption plumbing,
+  straggler mitigation (chunk-latency EWMA -> preempt & migrate), elastic
+  region failure/repair, and checkpoint/restart of scheduler state.
 
 Serve steps (paper):
   (1) find an available region;
-  (2) none: if preemption enabled, preempt a region running a strictly
-      lower-priority task (save context, re-enqueue);
-  (3) if the loaded kernel differs, enqueue a reconfiguration (internal task);
+  (2) none: if preemption enabled, ask the policy for a victim (FCFS: a
+      region running a strictly lower-priority task; save context,
+      re-enqueue);
+  (3) if the loaded kernel differs, enqueue a reconfiguration (internal
+      task);
   (4) launch; a previously stopped task has its context copied back first.
 """
 from __future__ import annotations
 
-import bisect
+import heapq
+import itertools
+import threading
 import time
+from collections import deque
 from dataclasses import dataclass
 from typing import List, Optional
 
 from repro.core.interrupts import Event, EventKind
+from repro.core.policy import (POLICY_NAMES, SchedulingPolicy, make_policy)
 from repro.core.region import Region
 from repro.core.shell import Shell
+from repro.core.submit import SubmissionQueue, TaskHandle
 from repro.core.task import N_PRIORITIES, Task, TaskStatus
 
 
@@ -27,6 +43,11 @@ from repro.core.task import N_PRIORITIES, Task, TaskStatus
 class SchedulerConfig:
     preemption: bool = True
     n_priorities: int = N_PRIORITIES
+    # queue discipline: "fcfs" (paper Algorithm 1, default), "edf"
+    # (Task.deadline_s order), or "wfq" (per-Task.tenant fair share).
+    policy: str = "fcfs"
+    # wfq: relative tenant weights (unlisted tenants weigh 1.0)
+    tenant_weights: Optional[dict] = None
     # full-reconfiguration baseline (paper §6.3): any kernel swap stalls ALL
     # regions and reloads the whole fabric.
     full_reconfig_mode: bool = False
@@ -37,90 +58,234 @@ class SchedulerConfig:
     repair_after_s: Optional[float] = None
     checkpoint_path: Optional[str] = None  # periodic scheduler checkpoints
     checkpoint_every_s: float = 5.0
-    # async bitstream prefetch: every task entering a priority queue is
-    # hinted to the shell's background prefetcher, which generates its
-    # bitstream off the dispatch path (the paper's latency-hiding §4.2).
+    # async bitstream prefetch: queued tasks (policy lookahead order) are
+    # hinted to the shell's background prefetcher, which generates their
+    # bitstreams off the dispatch path (the paper's latency-hiding §4.2).
     # None (default) follows Shell(prefetch=...), the single source of
     # truth; an explicit True/False here overrides it for this scheduler.
     prefetch: Optional[bool] = None
+    # how many queued tasks (in policy dispatch order) to keep hinted
+    prefetch_lookahead: int = 8
     # prefer dispatching to an idle region whose loaded bitstream already
     # matches the task (saves the partial reconfiguration entirely).
     bitstream_affinity: bool = True
 
+    def validate(self) -> "SchedulerConfig":
+        if self.n_priorities < 1:
+            raise ValueError(
+                f"n_priorities must be >= 1, got {self.n_priorities}")
+        if self.checkpoint_every_s < 0:
+            raise ValueError(
+                f"checkpoint_every_s must be >= 0, got "
+                f"{self.checkpoint_every_s}")
+        if self.prefetch_lookahead < 1:
+            raise ValueError(
+                f"prefetch_lookahead must be >= 1, got "
+                f"{self.prefetch_lookahead}")
+        if (self.policy or "").lower() not in POLICY_NAMES:
+            raise ValueError(
+                f"unknown scheduling policy {self.policy!r}; "
+                f"known: {', '.join(POLICY_NAMES)}")
+        for tenant, w in (self.tenant_weights or {}).items():
+            if w <= 0:
+                raise ValueError(
+                    f"tenant_weights[{tenant!r}] must be > 0, got {w}")
+        return self
+
 
 class Scheduler:
-    def __init__(self, shell: Shell, config: SchedulerConfig = None):
+    def __init__(self, shell: Shell, config: Optional[SchedulerConfig] = None,
+                 policy: Optional[SchedulingPolicy] = None):
+        if config is not None and not isinstance(config, SchedulerConfig):
+            raise TypeError(
+                f"config must be a SchedulerConfig (or None), got "
+                f"{type(config).__name__}")
         self.shell = shell
-        self.cfg = config or SchedulerConfig()
-        self.queues: List[list] = [[] for _ in range(self.cfg.n_priorities)]
+        self.cfg = (config or SchedulerConfig()).validate()
+        if policy is None:
+            policy = make_policy(self.cfg.policy,
+                                 n_priorities=self.cfg.n_priorities,
+                                 tenant_weights=self.cfg.tenant_weights)
+        policy.affinity = self.cfg.bitstream_affinity
+        self.policy = policy
+        # completed Task objects (report() aggregates over them).  A
+        # long-running server accumulates one entry per task; periodic
+        # drain()+restart (or sampling report() and clearing) bounds it.
         self.finished: List[Task] = []
         self.failed: List[Task] = []
         self.t0 = 0.0
         self._preempt_pending = set()  # region ids with a preempt in flight
         self._dead_since = {}
         self._last_ckpt = 0.0
-        self.events_log: List[tuple] = []
+        # debugging trace, bounded so server mode cannot grow it forever
+        self.events_log: deque = deque(maxlen=65536)
+        self.last_report: Optional[dict] = None
+
+        # admission layer
+        self._submissions = SubmissionQueue(wakeup=self._kick)
+        # tid -> TaskHandle; mutated only by the loop thread, but report()
+        # may scan it from a client thread, so mutations take this lock
+        self._handles: dict = {}
+        self._handles_lock = threading.Lock()
+        self._arrivals: list = []         # heap of (arrival_time, seq, ...)
+        self._seq = itertools.count()
+        self._hinted = set()              # (tid, n_preemptions) already sent
+        self._n_cancelled = 0
+        self._stranded = 0
+        self._running = False
+        # serializes run_forever() startup against drain()/shutdown() so a
+        # concurrent stop request cannot be erased mid-startup
+        self._lifecycle_lock = threading.Lock()
+        self._drain_req = threading.Event()
+        self._stop_req = threading.Event()
+        self._serving = threading.Event()
+        self._loop_done = threading.Event()
+        self._loop_done.set()             # no loop active yet
 
     # ------------------------------------------------------------------
     def now(self) -> float:
         return time.perf_counter() - self.t0
 
-    def _enqueue(self, task: Task):
-        task.status = TaskStatus.QUEUED
-        q = self.queues[task.priority]
-        # FCFS within a priority: keep sorted by arrival time
-        bisect.insort(q, task, key=lambda t: t.arrival_time)
-        self._hint_prefetch(task)
+    def _kick(self):
+        """Wake a loop blocked in WaitForInterrupt (submission/drain)."""
+        self.shell.interrupts.raise_interrupt(
+            Event(EventKind.HEARTBEAT, -1))
 
-    def _hint_prefetch(self, task: Task):
-        """Queue lookahead -> background bitstream generation (§4.2): warm
-        the task's bitstream for every geometry it could dispatch to while
-        it waits in the priority queue."""
-        prefetcher = getattr(self.shell, "prefetcher", None)
-        if prefetcher is None:
-            return
-        enabled = self.cfg.prefetch
-        if enabled is None:
-            enabled = self.shell.prefetch_enabled
-        if not enabled:
-            return
-        if not prefetcher.alive:  # lazy: the worker starts with the first
-            prefetcher.start()    # hint, never idles in unscheduled shells
-        prefetcher.submit(task, self.shell.geometries())
+    # -- admission layer -------------------------------------------------
+    def submit(self, task: Task) -> TaskHandle:
+        """Thread-safe online submission; the returned ``TaskHandle`` can
+        be waited on (``result``), polled (``status``) or ``cancel``led
+        while the task is still queued.  The handle resolves once a
+        serving loop processes the task — submitting while no loop runs
+        defers the work to the next ``run()``/``run_forever()``."""
+        return self._submissions.submit(task)
 
-    # ------------------------------------------------------------------
     def run(self, tasks_to_arrive: List[Task], quiet: bool = True) -> dict:
-        """Algorithm 1 main loop."""
-        pending = sorted(tasks_to_arrive, key=lambda t: t.arrival_time)
+        """Paper batch mode (Algorithm 1): replay ``tasks_to_arrive``
+        through ``submit()`` and drain.  Arrival times are honoured
+        relative to this call, exactly as the seed scheduler did."""
+        with self._lifecycle_lock:
+            if self._running:
+                raise RuntimeError("scheduler loop already running")
+            self._submissions.reopen()  # batch reuse after a prior drain()
+        for t in sorted(tasks_to_arrive, key=lambda t: t.arrival_time):
+            self.submit(t)
+        return self.run_forever(quiet=quiet, drain=True)
+
+    def run_forever(self, quiet: bool = True, drain: bool = False) -> dict:
+        """Serve submissions until ``drain()``/``shutdown()`` (server mode)
+        or until all submitted work completes (``drain=True``, batch
+        mode).  Blocks; servers call it from a dedicated thread."""
+        with self._lifecycle_lock:
+            if self._running:
+                raise RuntimeError("scheduler loop already running")
+            self._running = True
+            self._submissions.reopen()  # a prior drain()/shutdown() closed it
+            self._stop_req.clear()
+            if drain:
+                self._drain_req.set()
+            else:
+                self._drain_req.clear()
+            self._loop_done.clear()
         self.t0 = time.perf_counter()
-        n_total = len(pending)
+        self._last_ckpt = 0.0
+        self._serving.set()   # t0 is valid: now() / deadline_s make sense
+        crashed = True
+        try:
+            self._loop(quiet)
+            crashed = False
+        finally:
+            self._serving.clear()
+            if crashed:
+                # the loop died on an exception: a dead scheduler must not
+                # keep accepting work (run() reopens after a repair)
+                self._submissions.close()
+            # teardown/crash/batch exit: this loop will never serve what
+            # raced into the queue after its final empty() check —
+            # resolve those handles as cancelled rather than strand them
+            for _, handle in self._submissions.drain_new():
+                handle.cancel()
+            self._resolve_leftovers()
+            self.last_report = self.report()
+            self._running = False
+            self._loop_done.set()
+        return self.last_report
 
+    def wait_until_serving(self, timeout: Optional[float] = None) -> bool:
+        """Block until a ``run_forever``/``run`` loop has started and its
+        clock (``now()``, the reference for ``Task.deadline_s``) is valid.
+        Clients that compute deadlines must call this after starting the
+        server thread, or early deadlines are measured against a stale
+        ``t0``."""
+        return self._serving.wait(timeout)
+
+    def drain(self, timeout: Optional[float] = None) -> Optional[dict]:
+        """Graceful stop: refuse new submissions, finish everything
+        already submitted, then return that run's final report.  A no-op
+        returning ``None`` if no loop ever ran (the scheduler stays
+        usable); after an already-finished run it returns that run's
+        report.  Server threads should ``wait_until_serving()`` before
+        relying on drain to stop a loop that is only just starting."""
+        with self._lifecycle_lock:
+            if not self._running and self.last_report is None:
+                return None
+            self._submissions.close()
+            self._drain_req.set()
+        self._kick()
+        if not self._loop_done.wait(timeout):
+            raise TimeoutError(f"scheduler did not drain within {timeout}s")
+        return self.last_report
+
+    def shutdown(self, timeout: Optional[float] = None) -> Optional[dict]:
+        """Stop serving: refuse new submissions, cancel still-queued tasks
+        (their handles resolve as cancelled), let running tasks finish.
+        A no-op returning ``None`` if no loop ever ran; see ``drain`` for
+        the startup-race caveat."""
+        with self._lifecycle_lock:
+            if not self._running and self.last_report is None:
+                return None
+            self._submissions.close()
+            self._stop_req.set()
+        self._kick()
+        if not self._loop_done.wait(timeout):
+            raise TimeoutError(f"scheduler did not stop within {timeout}s")
+        return self.last_report
+
+    # -- event loop ------------------------------------------------------
+    def _loop(self, quiet: bool):
         while True:
-            # admit arrivals
+            self._ingest_submissions()
             now = self.now()
-            while pending and pending[0].arrival_time <= now:
-                t = pending.pop(0)
-                t.t_arrived = time.perf_counter()
-                self._enqueue(t)
-                if not quiet:
-                    print(f"[{now:7.3f}] arrive {t}")
+            while self._arrivals and self._arrivals[0][0] <= now:
+                _, _, task, handle = heapq.heappop(self._arrivals)
+                self._admit(task, handle, quiet)
 
-            if (not pending and not any(self.queues)
-                    and not self._any_running()):
+            if self._stop_req.is_set():
+                self._cancel_queued()
+
+            if (not self._arrivals and not self.policy.has_pending()
+                    and not self._any_running()
+                    and self._submissions.empty()
+                    and (self._drain_req.is_set()
+                         or self._stop_req.is_set())):
                 break
 
             if (not any(r.alive for r in self.shell.regions)
                     and self.cfg.repair_after_s is None):
-                raise RuntimeError(
+                n = len(self.policy.pending_tasks()) + len(self._arrivals)
+                err = RuntimeError(
                     "all regions failed and auto-repair is disabled; "
-                    f"{sum(len(q) for q in self.queues)} tasks stranded")
+                    f"{n} tasks stranded")
+                self._fail_outstanding(err)
+                raise err
 
             self._serve(quiet)
             self._check_stragglers()
             self._maybe_repair()
             self._maybe_checkpoint()
 
-            timeout = (pending[0].arrival_time - self.now()) if pending else 0.5
+            timeout = ((self._arrivals[0][0] - self.now())
+                       if self._arrivals else 0.5)
             ev = self.shell.interrupts.wait(max(1e-4, min(timeout, 0.5)))
             if ev is not None:
                 self._handle(ev, quiet)
@@ -129,7 +294,102 @@ class Scheduler:
         # current_task before its TASK_DONE interrupt is drained)
         for ev in self.shell.interrupts.drain():
             self._handle(ev, quiet)
-        return self.report()
+
+    def _ingest_submissions(self):
+        for task, handle in self._submissions.drain_new():
+            with self._handles_lock:
+                self._handles[task.tid] = handle
+            heapq.heappush(self._arrivals,
+                           (task.arrival_time, next(self._seq), task, handle))
+        if len(self._handles) > 2048:
+            with self._handles_lock:
+                for tid, h in list(self._handles.items()):
+                    if h.done():
+                        if h.cancelled():
+                            self._n_cancelled += 1
+                        del self._handles[tid]
+
+    def _admit(self, task: Task, handle: Optional[TaskHandle], quiet: bool):
+        task.t_arrived = time.perf_counter()
+        self._enqueue(task)
+        if not quiet:
+            print(f"[{self.now():7.3f}] arrive {task}")
+
+    def _enqueue(self, task: Task, requeue: bool = False):
+        handle = self._handles.get(task.tid)
+        if handle is not None:
+            if not handle._back_to_queue():
+                return  # cancelled while off-queue; handle already resolved
+        else:
+            task.status = TaskStatus.QUEUED
+        if requeue:
+            self.policy.on_requeue(task)
+        else:
+            self.policy.enqueue(task)
+        self._refresh_prefetch_hints()
+
+    def _cancel_queued(self):
+        """Stop path: resolve every not-yet-dispatched task as cancelled."""
+        for _, _, task, handle in self._arrivals:
+            if handle is not None:
+                handle.cancel()
+            else:
+                task.status = TaskStatus.CANCELLED
+        self._arrivals.clear()
+        for task in self.policy.pending_tasks():
+            handle = self._handles.get(task.tid)
+            if handle is not None:
+                handle.cancel()
+            else:
+                task.status = TaskStatus.CANCELLED
+        for task, handle in self._submissions.drain_new():
+            with self._handles_lock:
+                self._handles[task.tid] = handle
+            handle.cancel()
+
+    def _fail_outstanding(self, exc: BaseException):
+        for h in self._handles.values():
+            if not h.done():
+                h._fail(exc)
+
+    def _resolve_leftovers(self):
+        """No stranded TaskHandles: anything unresolved at loop exit is
+        settled (done tasks resolve, the rest fail loudly)."""
+        for tid, h in self._handles.items():
+            if h.done():
+                continue
+            if h.task.status is TaskStatus.DONE:
+                h._resolve()
+            else:
+                self._stranded += 1
+                h._fail(RuntimeError(
+                    f"task #{tid} stranded at scheduler exit "
+                    f"(status={h.task.status.value})"))
+
+    # -- prefetch plumbing ----------------------------------------------
+    def _refresh_prefetch_hints(self):
+        """Queue lookahead -> background bitstream generation (§4.2): warm
+        bitstreams for the next tasks in *policy dispatch order*, for every
+        geometry they could land on, while they wait in the queues."""
+        prefetcher = getattr(self.shell, "prefetcher", None)
+        if prefetcher is None:
+            return
+        enabled = self.cfg.prefetch
+        if enabled is None:
+            enabled = self.shell.prefetch_enabled
+        if not enabled:
+            return
+        for task in self.policy.peek_for_prefetch(self.cfg.prefetch_lookahead):
+            key = (task.tid, task.n_preemptions)
+            if key in self._hinted:
+                continue
+            if not prefetcher.alive:  # lazy: the worker starts with the
+                prefetcher.start()    # first hint, never idles otherwise
+            prefetcher.submit(task, self.shell.geometries())
+            self._hinted.add(key)
+        if len(self._hinted) > 4096:
+            self._hinted &= {(t.tid, t.n_preemptions)
+                             for t in self.policy.pending_tasks()}
 
     # ------------------------------------------------------------------
     def _any_running(self) -> bool:
@@ -148,75 +408,67 @@ class Scheduler:
                 # insta-preempt the next task launched there.
                 self._preempt_pending.discard(ev.region_id)
                 self.shell.regions[ev.region_id].cancel_preempt()
+            ev.task.deadline_missed = self._deadline_missed(ev.task)
+            self.policy.on_task_done(ev.task)
+            handle = self._handles.get(ev.task.tid)
+            if handle is not None:
+                handle._resolve()
             if not quiet:
                 print(f"[{self.now():7.3f}] done   {ev.task} on R{ev.region_id}")
         elif ev.kind == EventKind.TASK_PREEMPTED:
             self._preempt_pending.discard(ev.region_id)
-            self._enqueue(ev.task)  # paper: enqueue the stopped task
-            if not quiet:
+            self._enqueue(ev.task, requeue=True)  # paper: enqueue the
+            if not quiet:                         # stopped task
                 print(f"[{self.now():7.3f}] preempt {ev.task} off R{ev.region_id}")
         elif ev.kind == EventKind.REGION_FAILED:
             region = self.shell.regions[ev.region_id]
             self._preempt_pending.discard(ev.region_id)
             self._dead_since[ev.region_id] = self.now()
             task = ev.task
-            if task is not None and task.status != TaskStatus.DONE:
+            if task is not None and task.status not in (TaskStatus.DONE,
+                                                        TaskStatus.CANCELLED):
                 # elastic recovery: resume from the region bank's last
                 # committed context (survives the failure), else restart
                 committed = region.bank.restore()
                 task.saved_context = committed
                 task.n_migrations += 1
-                self._enqueue(task)
+                self._enqueue(task, requeue=True)
             if not quiet:
                 print(f"[{self.now():7.3f}] REGION {ev.region_id} FAILED")
         # RECONFIG_DONE / HEARTBEAT: accounting only
 
     # ------------------------------------------------------------------
     def _serve(self, quiet=True):
-        """Paper serve procedure, highest priority first, FCFS within."""
-        for prio in range(self.cfg.n_priorities):
-            q = self.queues[prio]
-            while q:
-                task = q[0]
-                region = self._find_idle_region(task)
-                if region is not None:
-                    q.pop(0)
-                    self._dispatch(region, task, quiet)
-                    continue
-                if self.cfg.preemption:
-                    victim = self._find_lower_priority_victim(prio)
-                    if victim is not None:
-                        self._preempt_pending.add(victim.rid)
-                        victim.request_preempt()
-                # nothing (more) to do at this priority now
+        """Paper serve procedure, policy-mediated: dispatch while the
+        policy can fill an idle region, then let it pick preemption
+        victims for the queue heads still blocked."""
+        dispatched = False
+        while True:
+            idle = [r for r in self.shell.regions
+                    if r.alive and r.idle
+                    and r.rid not in self._preempt_pending]
+            if not idle:
                 break
-
-    def _find_idle_region(self, task: Optional[Task] = None
-                          ) -> Optional[Region]:
-        """First idle region — preferring one whose loaded bitstream already
-        matches ``task`` (affinity skips the partial reconfiguration)."""
-        best = None
-        for r in self.shell.regions:
-            if r.alive and r.idle and r.rid not in self._preempt_pending:
-                if (task is not None and self.cfg.bitstream_affinity
-                        and r.loaded == (task.kernel, task.args.signature(),
-                                         r.geometry)):
-                    return r
-                if best is None:
-                    best = r
-        return best
-
-    def _find_lower_priority_victim(self, prio: int) -> Optional[Region]:
-        """Region running a STRICTLY lower-priority task (highest numeric
-        value first = least urgent victim)."""
-        best, best_prio = None, prio
-        for r in self.shell.regions:
-            if not r.alive or r.rid in self._preempt_pending:
-                continue
-            t = r.current_task
-            if t is not None and t.priority > best_prio:
-                best, best_prio = r, t.priority
-        return best
+            pick = self.policy.select(idle)
+            if pick is None:
+                break
+            task, region = pick
+            handle = self._handles.get(task.tid)
+            if handle is not None and not handle._claim():
+                continue  # lost the race against a client-side cancel()
+            self._dispatch(region, task, quiet)
+            dispatched = True
+        if dispatched:
+            self._refresh_prefetch_hints()
+        if not self.cfg.preemption:
+            return
+        for candidate in self.policy.preempt_candidates():
+            running = [r for r in self.shell.regions
+                       if r.alive and r.rid not in self._preempt_pending]
+            victim = self.policy.choose_victim(candidate, running)
+            if victim is not None:
+                self._preempt_pending.add(victim.rid)
+                victim.request_preempt()
 
     def _dispatch(self, region: Region, task: Task, quiet=True):
         key = (task.kernel, task.args.signature(), region.geometry)
@@ -289,6 +541,19 @@ class Scheduler:
         self._last_ckpt = self.now()
 
     # ------------------------------------------------------------------
+    @staticmethod
+    def _percentile(sorted_vals: List[float], q: float) -> float:
+        if not sorted_vals:
+            return 0.0
+        i = min(len(sorted_vals) - 1, int(round(q * (len(sorted_vals) - 1))))
+        return sorted_vals[i]
+
+    def _deadline_missed(self, t: Task) -> bool:
+        """Valid only while the run that served ``t`` is the current one;
+        completed tasks carry the verdict in ``t.deadline_missed``."""
+        return (t.deadline_s is not None and t.t_done is not None
+                and (t.t_done - self.t0) > t.deadline_s)
+
     def report(self) -> dict:
         tasks = self.finished
         per_prio = {}
@@ -302,6 +567,39 @@ class Scheduler:
             }
         span = max((t.t_done for t in tasks if t.t_done), default=self.t0)
         wall = max(span - self.t0, 1e-9)
+
+        # policy-level metrics: turnaround percentiles, deadlines, fairness
+        turnarounds = sorted(t.turnaround for t in tasks
+                             if t.turnaround is not None)
+        deadline_tasks = [t for t in tasks if t.deadline_s is not None]
+        weights = getattr(self.policy, "weights", {}) or {}
+        per_tenant = {}
+        for t in tasks:
+            d = per_tenant.setdefault(t.tenant, {
+                "n": 0, "work_s": 0.0, "deadline_misses": 0,
+                "turnarounds": []})
+            d["n"] += 1
+            d["work_s"] += t.run_s
+            d["turnarounds"].append(t.turnaround or 0.0)
+            if t.deadline_missed:
+                d["deadline_misses"] += 1
+        shares = []
+        for tenant, d in per_tenant.items():
+            ts = sorted(d.pop("turnarounds"))
+            d["turnaround_p50_s"] = self._percentile(ts, 0.50)
+            d["turnaround_p99_s"] = self._percentile(ts, 0.99)
+            d["share"] = d["work_s"] / weights.get(tenant, 1.0)
+            shares.append(d["share"])
+        if len(shares) >= 2 and min(shares) > 0:
+            fairness = max(shares) / min(shares)
+        elif len(shares) >= 2:
+            fairness = float("inf")
+        else:
+            fairness = 1.0
+
+        with self._handles_lock:  # the loop thread may be pruning handles
+            live_cancelled = sum(1 for h in self._handles.values()
+                                 if h.cancelled())
         es = self.shell.engine.stats
         # nested detail carries only what the top-level keys don't: one
         # source of truth per number (the two are sampled at different
@@ -316,7 +614,17 @@ class Scheduler:
             "n_done": len(tasks),
             "wall_s": wall,
             "throughput_tps": len(tasks) / wall,
+            "policy": self.policy.name,
             "service_by_priority": per_prio,
+            "turnaround_p50_s": self._percentile(turnarounds, 0.50),
+            "turnaround_p99_s": self._percentile(turnarounds, 0.99),
+            "deadline_tasks": len(deadline_tasks),
+            "deadline_misses": sum(t.deadline_missed
+                                   for t in deadline_tasks),
+            "per_tenant": per_tenant,
+            "fairness_ratio": fairness,
+            "cancelled": self._n_cancelled + live_cancelled,
+            "stranded_handles": self._stranded,
             "preemptions": sum(t.n_preemptions for t in tasks),
             "migrations": sum(t.n_migrations for t in tasks),
             "reconfigs": es.partial_loads,

@@ -25,6 +25,7 @@ class TaskStatus(Enum):
     PREEMPTED = "preempted"  # context saved, waiting in queue again
     DONE = "done"
     FAILED = "failed"
+    CANCELLED = "cancelled"  # cancelled via TaskHandle while still queued
 
 
 _ids = itertools.count()
@@ -36,6 +37,11 @@ class Task:
     args: Any                     # ArgBundle (uniform ABI)
     priority: int = N_PRIORITIES - 1  # 0 = most urgent
     arrival_time: float = 0.0     # seconds from scheduler start
+    # EDF policy: absolute deadline in seconds from scheduler start
+    # (same clock as arrival_time); None = background, no deadline.
+    deadline_s: Optional[float] = None
+    # WFQ policy + per-tenant metrics: which tenant submitted this task.
+    tenant: str = "default"
     tid: int = field(default_factory=lambda: next(_ids))
     status: TaskStatus = TaskStatus.PENDING
     # context of a preempted task (host-side committed copy)
@@ -47,6 +53,10 @@ class Task:
     n_preemptions: int = 0
     n_reconfigs: int = 0
     n_migrations: int = 0
+    run_s: float = 0.0            # accumulated on-region execution time
+    # stamped by the scheduler at completion (deadline_s is relative to the
+    # serving run's start, so it cannot be recomputed after that run ends)
+    deadline_missed: bool = False
     region_history: list = field(default_factory=list)
 
     @property
@@ -68,22 +78,35 @@ class Task:
 
 
 def generate_random_tasks(rng, kernels: list, n_tasks: int, rate_T: float,
-                          arg_factory, n_priorities: int = N_PRIORITIES
+                          arg_factory, n_priorities: int = N_PRIORITIES,
+                          tenants: Optional[list] = None,
+                          deadline_slack: Optional[tuple] = None
                           ) -> list[Task]:
     """Paper §4.3: pre-generate ``tasks_to_arrive`` ordered by random arrival
     time ~ U(0, T), random priority, random kernel, random args.
 
     ``rate_T`` is in seconds here (the paper uses minutes at its scale).
     ``arg_factory(rng, kernel_name)`` builds the ArgBundle.
+
+    ``tenants`` (optional) assigns each task a tenant round-robin;
+    ``deadline_slack=(lo, hi)`` (optional) sets ``deadline_s`` to
+    ``arrival + U(lo, hi)``.  Both default to off and draw nothing from
+    ``rng`` when off, so existing seeded streams are unchanged.
     """
     tasks = []
-    for _ in range(n_tasks):
+    for i in range(n_tasks):
         k = kernels[int(rng.integers(len(kernels)))]
-        tasks.append(Task(
+        t = Task(
             kernel=k,
             args=arg_factory(rng, k),
             priority=int(rng.integers(n_priorities)),
             arrival_time=float(rng.uniform(0.0, rate_T)),
-        ))
+        )
+        if tenants:
+            t.tenant = tenants[i % len(tenants)]
+        if deadline_slack is not None:
+            lo, hi = deadline_slack
+            t.deadline_s = t.arrival_time + float(rng.uniform(lo, hi))
+        tasks.append(t)
     tasks.sort(key=lambda t: t.arrival_time)
     return tasks

@@ -5,12 +5,18 @@ LM mode — prefill a batch of prompts, then greedy-decode:
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \
         --prompt-len 32 --gen 16
 
-Scheduler mode — serve a random kernel-task stream through the preemptive
-scheduler (paper §6 setup) and report the reconfiguration pipeline's health:
-prefetch hit rate, dispatch stall time, cache evictions:
+Scheduler mode — serve a kernel-task stream through the preemptive
+scheduler under a pluggable policy (--policy fcfs|edf|wfq) and report the
+pipeline's health: per-tenant fairness, deadline misses, prefetch hit
+rate, dispatch stall time, cache evictions.  The default is the paper's
+batch replay (§6 setup); ``--open-loop`` instead submits tasks live from
+a client thread (Poisson arrivals at ``--arrival-rate`` tasks/s) through
+``Scheduler.submit()`` while ``run_forever()`` serves them:
 
     PYTHONPATH=src python -m repro.launch.serve --mode scheduler \
         --n-tasks 16 --regions 2 [--no-prefetch]
+    PYTHONPATH=src python -m repro.launch.serve --mode scheduler \
+        --policy wfq --open-loop --tenants 2 --arrival-rate 4
 """
 from __future__ import annotations
 
@@ -67,35 +73,108 @@ def serve(cfg, *, batch: int = 4, prompt_len: int = 32, gen: int = 16,
 
 def serve_task_stream(*, n_tasks: int = 16, n_regions: int = 2,
                       size: int = 48, rate_s: float = 1.0, seed: int = 0,
-                      prefetch: bool = True,
+                      prefetch: bool = True, policy: str = "fcfs",
+                      open_loop: bool = False, arrival_rate: float = 4.0,
+                      tenants: int = 1,
                       cache_capacity: int = None, quiet: bool = False) -> dict:
     """Serve a random blur-task stream through the preemptive scheduler and
-    return its report, including the async-reconfiguration statistics."""
+    return its report, including the async-reconfiguration statistics.
+
+    Batch mode (default) replays pre-generated arrivals, exactly the paper
+    harness.  ``open_loop=True`` submits the same tasks live — a client
+    thread with Poisson inter-arrival gaps (``arrival_rate`` tasks/s) calls
+    ``Scheduler.submit()`` against a ``run_forever()`` server loop, then
+    waits on every ``TaskHandle`` and drains.
+    """
     from repro.controller.kernels import get_kernel
     from repro.core.scheduler import Scheduler, SchedulerConfig
     from repro.core.shell import Shell
     from repro.core.task import generate_random_tasks
     from repro.kernels.blur.tasks import make_image
 
-    rng = np.random.default_rng(seed)
+    from repro.core.task import Task
 
-    def arg_factory(r, k):
+    rng = np.random.default_rng(seed)
+    n_tenants = max(1, tenants)
+    tenant_names = [f"tenant{i}" for i in range(n_tenants)]
+
+    def arg_factory(r, k, iters=None):
         img = make_image(r, size)
         kd = get_kernel(k)
+        if iters is None:
+            iters = int(r.integers(1, 3))
         return kd.bundle(img, np.zeros_like(img), H=size, W=size,
-                         iters=int(r.integers(1, 3)))
+                         iters=iters)
 
-    tasks = generate_random_tasks(rng, ["MedianBlur", "GaussianBlur"],
-                                  n_tasks, rate_s, arg_factory)
+    kernels = ["MedianBlur", "GaussianBlur"]
+    if open_loop:
+        # every tenant gets the identical kernel mix and per-task cost, so
+        # the fairness ratio reflects the scheduler's grants rather than a
+        # randomly asymmetric workload
+        tasks = [Task(kernel=kernels[(i // n_tenants) % len(kernels)],
+                      args=arg_factory(rng, kernels[(i // n_tenants)
+                                                    % len(kernels)], iters=1),
+                      priority=int(rng.integers(5)),
+                      tenant=tenant_names[i % n_tenants])
+                 for i in range(n_tasks)]
+    else:
+        tasks = generate_random_tasks(
+            rng, kernels, n_tasks, rate_s, arg_factory,
+            tenants=tenant_names,
+            deadline_slack=(1.0, 3.0) if policy == "edf" else None)
     shell = Shell(n_regions=n_regions, chunk_budget=2, prefetch=prefetch,
                   cache_capacity=cache_capacity)
-    sched = Scheduler(shell, SchedulerConfig())
-    rep = sched.run(tasks, quiet=True)
+    sched = Scheduler(shell, SchedulerConfig(policy=policy))
+
+    if not open_loop:
+        rep = sched.run(tasks, quiet=True)
+    else:
+        import threading
+
+        # warm both bitstreams so the fairness/turnaround numbers measure
+        # scheduling, not whichever tenant pays the one-off XLA compile
+        for kname in ("MedianBlur", "GaussianBlur"):
+            ex = next((t for t in tasks if t.kernel == kname), None)
+            if ex is None:
+                continue
+            for geom in shell.geometries():
+                shell.engine.prewarm(kname, ex.args, geom)
+
+        for r in shell.regions:
+            r.slowdown_s = 0.02  # deterministic per-chunk work: fairness
+            # and turnaround measure scheduling, not μs-scale kernel noise
+
+        server = threading.Thread(target=sched.run_forever,
+                                  name="scheduler-loop", daemon=True)
+        server.start()
+        sched.wait_until_serving(timeout=10.0)  # t0 valid before deadlines
+        handles = []
+        for t in tasks:
+            if policy == "edf":
+                t.deadline_s = sched.now() + float(rng.uniform(1.0, 3.0))
+            handles.append(sched.submit(t))
+            time.sleep(float(rng.exponential(1.0 / max(arrival_rate, 1e-6))))
+        for h in handles:
+            h.wait(timeout=120.0)
+        rep = sched.drain(timeout=60.0)
+        server.join(timeout=10.0)
+        # drain resolves every handle; anything still pending is a real
+        # stranded future the scheduler-side count missed
+        rep["stranded_handles"] += sum(1 for h in handles if not h.done())
+
     shell.shutdown()
     if not quiet:
-        print(f"[serve] {rep['n_done']}/{n_tasks} tasks in "
+        mode = "open-loop" if open_loop else "batch"
+        print(f"[serve] policy={rep['policy']} ({mode}) "
+              f"{rep['n_done']}/{n_tasks} tasks in "
               f"{rep['wall_s']:.2f}s ({rep['throughput_tps']:.1f} tasks/s), "
               f"{rep['preemptions']} preemptions")
+        print(f"[serve] turnaround p50 {rep['turnaround_p50_s']:.2f}s / "
+              f"p99 {rep['turnaround_p99_s']:.2f}s, "
+              f"{rep['deadline_misses']}/{rep['deadline_tasks']} deadline "
+              f"misses, fairness ratio {rep['fairness_ratio']:.2f} "
+              f"({len(rep['per_tenant'])} tenants), "
+              f"{rep['stranded_handles']} stranded handles")
         print(f"[serve] reconfig: {rep['reconfigs']} partial loads, "
               f"prefetch hit rate {rep['prefetch_hit_rate']:.0%}, "
               f"{rep['cold_compiles']} cold compiles "
@@ -115,12 +194,24 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--n-tasks", type=int, default=16)
     ap.add_argument("--regions", type=int, default=2)
+    ap.add_argument("--policy", choices=("fcfs", "edf", "wfq"),
+                    default="fcfs")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="submit tasks live via Scheduler.submit() instead "
+                         "of replaying a pre-generated batch")
+    ap.add_argument("--arrival-rate", type=float, default=4.0,
+                    help="open-loop Poisson arrival rate (tasks/s)")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="assign tasks round-robin to N tenants")
     ap.add_argument("--no-prefetch", action="store_true")
     ap.add_argument("--cache-capacity", type=int, default=None)
     args = ap.parse_args()
     if args.mode == "scheduler":
         serve_task_stream(n_tasks=args.n_tasks, n_regions=args.regions,
                           prefetch=not args.no_prefetch,
+                          policy=args.policy, open_loop=args.open_loop,
+                          arrival_rate=args.arrival_rate,
+                          tenants=args.tenants,
                           cache_capacity=args.cache_capacity)
         return
     cfg = get_config(args.arch)
