@@ -1,7 +1,9 @@
 """Paper Fig. 3: service time per priority queue, +-preemption, 1 vs 2 RRs,
 three arrival rates (largest size, 30 tasks) — plus a policy arm comparing
 fcfs vs edf vs wfq on the same task stream (p50/p99 turnaround, deadline
-misses, fairness)."""
+misses, fairness) and an elastic arm comparing static-1RR / static-2RR /
+autoscaled pools on a bursty open-loop trace (p99 turnaround vs
+region-seconds consumed)."""
 from __future__ import annotations
 
 import json
@@ -123,4 +125,119 @@ def measure_policies(printer=print, cache_path: str = "bench_policies.json",
                 f"{r['deadline_tasks']};"
                 f"fairness={r['fairness_ratio']:.2f};"
                 f"n_done={r['n_done']};preempt={r['preemptions']}")
+    return results
+
+
+# ------------------------------------------------------------- elastic pool
+def run_elastic_cell(arm: str, *, n_bursts: int = 3, burst: int = 6,
+                     gap_s: float = 2.5, size: int = 48, seed: int = 11,
+                     slowdown: float = 0.02, max_regions: int = 2) -> dict:
+    """One arm of the elastic comparison under a deterministic bursty
+    open-loop trace: ``burst`` tasks arrive back-to-back, then the line
+    goes idle for ``gap_s`` — repeated ``n_bursts`` times.
+
+    ``arm`` is ``static1`` / ``static2`` (fixed shells, the paper's two
+    builds) or ``elastic`` (1 region + autoscaler bounded at
+    ``max_regions``).  Returns the scheduler report with the run config
+    and region-seconds attached.
+    """
+    import threading
+    import time as _time
+
+    from repro.controller.kernels import get_kernel
+    from repro.core.pool import Autoscaler, AutoscalerConfig, RegionPool
+    from repro.core.scheduler import Scheduler, SchedulerConfig
+    from repro.core.shell import Shell
+    from repro.core.task import Task
+    from repro.kernels.blur.tasks import make_image
+
+    rng = np.random.default_rng(seed)
+    kernels = ["MedianBlur", "GaussianBlur"]
+
+    def make_task(i):
+        k = kernels[i % len(kernels)]
+        img = make_image(rng, size)
+        kd = get_kernel(k)
+        return Task(kernel=k,
+                    args=kd.bundle(img, np.zeros_like(img), H=size, W=size,
+                                   iters=1),
+                    priority=int(rng.integers(5)))
+
+    tasks = [make_task(i) for i in range(n_bursts * burst)]
+
+    pool = None
+    if arm == "elastic":
+        shell = Shell(n_regions=1, chunk_budget=2)
+        pool = RegionPool(shell, autoscaler=Autoscaler(AutoscalerConfig(
+            min_regions=1, max_regions=max_regions,
+            grow_queue_depth=1.5, cooldown_s=0.25, idle_grace_s=0.3)))
+    else:
+        shell = Shell(n_regions={"static1": 1, "static2": 2}[arm],
+                      chunk_budget=2)
+    for kname in kernels:
+        shell.engine.prewarm(kname, tasks[0].args, shell.regions[0].geometry)
+    shell.region_slowdown_s = slowdown  # grown regions inherit the same
+    for r in shell.regions:             # deterministic per-chunk cost
+        r.slowdown_s = slowdown
+
+    sched = Scheduler(shell, SchedulerConfig(), pool=pool)
+    server = threading.Thread(target=sched.run_forever, daemon=True)
+    server.start()
+    sched.wait_until_serving(timeout=10.0)
+    handles = []
+    for b in range(n_bursts):
+        for i in range(burst):
+            handles.append(sched.submit(tasks[b * burst + i]))
+        if b < n_bursts - 1:
+            _time.sleep(gap_s)
+    for h in handles:
+        h.wait(timeout=120.0)
+    rep = sched.drain(timeout=60.0)
+    server.join(timeout=10.0)
+    shell.shutdown()
+    rep["cfg"] = {"arm": arm, "n_bursts": n_bursts, "burst": burst,
+                  "gap_s": gap_s, "size": size, "seed": seed,
+                  "max_regions": max_regions}
+    rep["region_seconds"] = rep["pool"]["region_seconds"]
+    return rep
+
+
+def measure_elastic(printer=print, cache_path: str = "bench_elastic.json",
+                    use_cache: bool = True, **cell_kwargs):
+    """Static-1RR vs static-2RR vs autoscaled pool on the same bursty
+    open-loop trace: turnaround p99 against region-seconds consumed.  The
+    elastic pool should hold p99 near static-2RR while consuming fewer
+    region-seconds (it sheds the second region between bursts)."""
+    if use_cache and os.path.exists(cache_path):
+        with open(cache_path) as f:
+            results = json.load(f)
+    else:
+        results = [run_elastic_cell(a, **cell_kwargs)
+                   for a in ("static1", "static2", "elastic")]
+        keep = ("cfg", "n_done", "wall_s", "throughput_tps",
+                "turnaround_p50_s", "turnaround_p99_s", "preemptions",
+                "region_seconds", "pool")
+        results = [{k: r[k] for k in keep} for r in results]
+        with open(cache_path, "w") as f:
+            json.dump(results, f)
+    printer("# elastic arm: static-1RR vs static-2RR vs autoscaled pool "
+            "on a bursty trace (name,us_per_call,derived)")
+    for r in results:
+        p = r["pool"]
+        printer(f"elastic/{r['cfg']['arm']}_turnaround,"
+                f"{r['turnaround_p50_s']*1e6:.0f},"
+                f"p99_us={r['turnaround_p99_s']*1e6:.0f};"
+                f"region_s={r['region_seconds']:.2f};"
+                f"resizes={p.get('resizes', 0)};"
+                f"util={p.get('utilization', 0.0):.2f};"
+                f"n_done={r['n_done']}")
+    by_arm = {r["cfg"]["arm"]: r for r in results}
+    if "static2" in by_arm and "elastic" in by_arm:
+        s2, el = by_arm["static2"], by_arm["elastic"]
+        ratio = (el["turnaround_p99_s"] /
+                 max(s2["turnaround_p99_s"], 1e-9))
+        saved = s2["region_seconds"] - el["region_seconds"]
+        printer(f"elastic/headline,{el['turnaround_p99_s']*1e6:.0f},"
+                f"p99_vs_static2={ratio:.2f}x;"
+                f"region_s_saved={saved:.2f}")
     return results

@@ -47,6 +47,13 @@ def main() -> None:
     else:
         bench_service_time.measure_policies(use_cache=not args.no_cache)
 
+    # elastic region-pool arm (static-1RR vs static-2RR vs autoscaled on a
+    # bursty open-loop trace); same fast-mode caching contract
+    if args.fast and not os.path.exists("bench_elastic.json"):
+        print("elastic/skipped,0,fast-mode")
+    else:
+        bench_service_time.measure_elastic(use_cache=not args.no_cache)
+
     if args.fast and not os.path.exists("bench_sweep.json"):
         print("sweep/skipped,0,fast-mode")
         return

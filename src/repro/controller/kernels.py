@@ -29,6 +29,10 @@ class KernelDef:
     float_args: tuple
     # per-chunk iteration budget default (preemption latency knob)
     default_budget: int = 64
+    # resource footprint (DESIGN.md §6.2): minimum region width, in devices,
+    # this kernel needs — the floorplanner sizes heterogeneous region
+    # slices against the declared footprints of the pending workload
+    footprint: int = 1
 
     def bundle(self, *bufs, **scalars) -> ArgBundle:
         """Build an ArgBundle from declared argument names."""
@@ -44,12 +48,14 @@ def ctrl_kernel(name: str, backend: str = "PYNQ",
                 ktile_args: Sequence[str] = (),
                 int_args: Sequence[str] = (),
                 float_args: Sequence[str] = (),
-                default_budget: int = 64):
+                default_budget: int = 64,
+                footprint: int = 1):
     def deco(fn):
         kd = KernelDef(name=name, backend=backend, fn=fn,
                        ktile_args=tuple(ktile_args), int_args=tuple(int_args),
                        float_args=tuple(float_args),
-                       default_budget=default_budget)
+                       default_budget=default_budget,
+                       footprint=footprint)
         _REGISTRY[name] = kd
         return fn
 

@@ -40,11 +40,24 @@ from repro.core.task import Task, TaskStatus
 POLICY_NAMES = ("fcfs", "edf", "wfq")
 
 
+def region_fits(task: Task, region) -> bool:
+    """Placement feasibility (DESIGN.md §6.2): the region's device slice
+    must be at least as wide as the task's resource footprint."""
+    need = getattr(task, "footprint", None) or 1
+    devs = getattr(region, "devices", None)
+    capacity = len(devs) if devs is not None else 1
+    return need <= capacity
+
+
 def pick_region(task: Task, idle_regions: Sequence, affinity: bool = True):
-    """First idle region, preferring one whose loaded bitstream already
-    matches ``task`` (exactly the seed scheduler's affinity rule)."""
+    """First idle region the task *fits on* (footprint <= region width),
+    preferring one whose loaded bitstream already matches ``task`` (exactly
+    the seed scheduler's affinity rule).  ``None`` when no idle region is
+    wide enough — the caller may try a different task."""
     best = None
     for r in idle_regions:
+        if task is not None and not region_fits(task, r):
+            continue
         if (affinity and task is not None
                 and r.loaded == (task.kernel, task.args.signature(),
                                  r.geometry)):
@@ -186,7 +199,9 @@ class FcfsPriority(SchedulingPolicy):
                 continue
             region = pick_region(t, idle_regions, self.affinity)
             if region is None:
-                return None
+                # head blocked on placement (no idle region wide enough):
+                # FIFO within the level is preserved, lower levels may run
+                continue
             q.pop()
             return t, region
         return None
@@ -261,10 +276,27 @@ class EarliestDeadlineFirst(SchedulingPolicy):
             return None
         task = self._heap[0][3]
         region = pick_region(task, idle_regions, self.affinity)
-        if region is None:
+        if region is not None:
+            heapq.heappop(self._heap)
+            return task, region
+        # head blocked on placement: O(n) scan for the earliest-deadline
+        # task that fits an idle region (rare — only wide-footprint heads)
+        best_i = None
+        for i, e in enumerate(self._heap):
+            if e[3].status is TaskStatus.CANCELLED:
+                continue
+            if best_i is not None and e[:3] >= self._heap[best_i][:3]:
+                continue
+            if pick_region(e[3], idle_regions, self.affinity) is not None:
+                best_i = i
+        if best_i is None:
             return None
-        heapq.heappop(self._heap)
-        return task, region
+        entry = self._heap[best_i]
+        self._heap[best_i] = self._heap[-1]
+        self._heap.pop()
+        if best_i < len(self._heap):
+            heapq.heapify(self._heap)
+        return entry[3], pick_region(entry[3], idle_regions, self.affinity)
 
     def choose_victim(self, candidate, running):
         # qualification is on the deadline ALONE and strict — equal
@@ -352,25 +384,22 @@ class WeightedFairShare(SchedulingPolicy):
         if newly_backlogged:
             self._vt[tenant] = max(self._vt.get(tenant, 0.0), self._vclock)
 
-    def _next_tenant(self) -> Optional[str]:
-        backlogged = self._backlogged()
-        if not backlogged:
-            return None
-        return min(backlogged, key=lambda t: (self._vt.get(t, 0.0), t))
-
     def select(self, idle_regions):
-        tenant = self._next_tenant()
-        if tenant is None:
-            return None
-        task = self._queues[tenant][0]
-        region = pick_region(task, idle_regions, self.affinity)
-        if region is None:
-            return None
-        self._queues[tenant].popleft()
-        start = self._vt.get(tenant, 0.0)
-        self._vclock = max(self._vclock, start)
-        self._vt[tenant] = start + self.quantum / self._weight(tenant)
-        return task, region
+        # tenants in virtual-time order; a tenant whose head task cannot be
+        # placed (footprint too wide for every idle region) is skipped this
+        # round without burning its virtual time
+        for tenant in sorted(self._backlogged(),
+                             key=lambda t: (self._vt.get(t, 0.0), t)):
+            task = self._queues[tenant][0]
+            region = pick_region(task, idle_regions, self.affinity)
+            if region is None:
+                continue
+            self._queues[tenant].popleft()
+            start = self._vt.get(tenant, 0.0)
+            self._vclock = max(self._vclock, start)
+            self._vt[tenant] = start + self.quantum / self._weight(tenant)
+            return task, region
+        return None
 
     def choose_victim(self, candidate, running):
         # urgency stays priority-driven (paper rule); ties broken toward

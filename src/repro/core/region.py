@@ -16,6 +16,7 @@ import queue
 import threading
 import time
 from dataclasses import dataclass, field
+from enum import Enum
 from typing import Any, Optional, Tuple
 
 import jax
@@ -27,6 +28,20 @@ from repro.core.context import ContextBank, ContextRecord, Committed
 from repro.core.interrupts import Event, EventKind, InterruptController
 from repro.core.reconfig import ReconfigEngine
 from repro.core.task import Task, TaskStatus
+
+
+class RegionState(Enum):
+    """Elastic-pool lifecycle (DESIGN.md §6.1).
+
+    ACTIVE regions accept dispatches; a DRAINING region finishes (or is
+    checkpoint-preempted off) its current work but receives nothing new; a
+    RETIRED region's worker is shut down and its devices have been returned
+    to the floorplanner.  ``repair()`` revives a failed region back to
+    ACTIVE; RETIRED is terminal.
+    """
+    ACTIVE = "active"
+    DRAINING = "draining"
+    RETIRED = "retired"
 
 
 @dataclass
@@ -56,6 +71,7 @@ class Region:
         self.executable = None
         self.stats = RegionStats()
         self.current_task: Optional[Task] = None
+        self.state = RegionState.ACTIVE
 
         self._q: "queue.Queue[tuple]" = queue.Queue()
         self._inflight = 0  # commands enqueued but not fully processed
@@ -108,10 +124,34 @@ class Region:
         """Kill this region (node failure simulation)."""
         self._failed.set()
 
+    def begin_drain(self):
+        """Elastic shrink step 1: stop accepting dispatches.  The caller
+        (``RegionPool``) preempts the current task and retires the region
+        once it is idle."""
+        if self.state is RegionState.ACTIVE:
+            self.state = RegionState.DRAINING
+
+    def retire(self):
+        """Elastic shrink step 2 (terminal): shut the worker down."""
+        self.state = RegionState.RETIRED
+        self.shutdown()
+
     def repair(self):
         """Bring the region back (elastic grow).  Its bank survives."""
+        if self.state is RegionState.RETIRED:
+            raise RuntimeError(
+                f"region {self.rid} is retired; add a new region instead")
+        # a DRAINING region stays draining: repair revives the worker so the
+        # pool can finish retiring it, but must NOT make it dispatchable
+        revived_state = (self.state if self.state is RegionState.DRAINING
+                         else RegionState.ACTIVE)
         if self._thread and self._thread.is_alive():
+            # failure injected while the worker idled: the thread never hit
+            # _check_failure and is still running — just lift the flag
+            self._failed.clear()
+            self.state = revived_state
             return
+        self.state = revived_state
         self.loaded = None
         self.executable = None
         self.current_task = None
@@ -136,6 +176,11 @@ class Region:
     def alive(self) -> bool:
         return (self._thread is not None and self._thread.is_alive()
                 and not self._failed.is_set())
+
+    @property
+    def dispatchable(self) -> bool:
+        """Eligible for new work: alive and not draining/retired."""
+        return self.alive and self.state is RegionState.ACTIVE
 
     # ------------------------------------------------------------------
     def _run(self):

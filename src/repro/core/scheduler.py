@@ -12,6 +12,12 @@
   straggler mitigation (chunk-latency EWMA -> preempt & migrate), elastic
   region failure/repair, and checkpoint/restart of scheduler state.
 
+An optional ``RegionPool`` (``core/pool.py``) makes the region list itself
+elastic: the loop ticks the pool once per iteration, so autoscaler
+decisions, drain-retirements, and floorplan replans all happen on the loop
+thread.  Dispatch consults placement feasibility (``Task.footprint`` vs the
+region's device-slice width) through the policy's ``pick_region``.
+
 Serve steps (paper):
   (1) find an available region;
   (2) none: if preemption enabled, ask the policy for a victim (FCFS: a
@@ -33,7 +39,7 @@ from typing import List, Optional
 
 from repro.core.interrupts import Event, EventKind
 from repro.core.policy import (POLICY_NAMES, SchedulingPolicy, make_policy)
-from repro.core.region import Region
+from repro.core.region import Region, RegionState
 from repro.core.shell import Shell
 from repro.core.submit import SubmissionQueue, TaskHandle
 from repro.core.task import N_PRIORITIES, Task, TaskStatus
@@ -95,12 +101,15 @@ class SchedulerConfig:
 
 class Scheduler:
     def __init__(self, shell: Shell, config: Optional[SchedulerConfig] = None,
-                 policy: Optional[SchedulingPolicy] = None):
+                 policy: Optional[SchedulingPolicy] = None,
+                 pool: Optional[object] = None):
         if config is not None and not isinstance(config, SchedulerConfig):
             raise TypeError(
                 f"config must be a SchedulerConfig (or None), got "
                 f"{type(config).__name__}")
         self.shell = shell
+        # elastic region pool (core/pool.py); ticked from the event loop
+        self.pool = pool
         self.cfg = (config or SchedulerConfig()).validate()
         if policy is None:
             policy = make_policy(self.cfg.policy,
@@ -115,6 +124,16 @@ class Scheduler:
         self.failed: List[Task] = []
         self.t0 = 0.0
         self._preempt_pending = set()  # region ids with a preempt in flight
+        # region ids whose TASK_DONE/TASK_PREEMPTED was just handled: the
+        # worker raises the interrupt moments before retiring its inflight
+        # count, so the region may still read busy when _serve runs — the
+        # event itself proves it is free for redispatch.  Without this the
+        # post-completion dispatch could stall a full WaitForInterrupt
+        # timeout (0.5s) on an otherwise idle system.
+        self._idle_hint = set()
+        # running count of deadline misses (report() recomputes from the
+        # finished list; the autoscaler reads this O(1) counter every tick)
+        self.deadline_misses_total = 0
         self._dead_since = {}
         self._last_ckpt = 0.0
         # debugging trace, bounded so server mode cannot grow it forever
@@ -189,6 +208,7 @@ class Scheduler:
             self._loop_done.clear()
         self.t0 = time.perf_counter()
         self._last_ckpt = 0.0
+        self._idle_hint.clear()
         self._serving.set()   # t0 is valid: now() / deadline_s make sense
         crashed = True
         try:
@@ -280,6 +300,8 @@ class Scheduler:
                 raise err
 
             self._serve(quiet)
+            if self.pool is not None:
+                self.pool.tick(self)
             self._check_stragglers()
             self._maybe_repair()
             self._maybe_checkpoint()
@@ -311,9 +333,53 @@ class Scheduler:
 
     def _admit(self, task: Task, handle: Optional[TaskHandle], quiet: bool):
         task.t_arrived = time.perf_counter()
+        if not self._placement_feasible(task, handle):
+            return
         self._enqueue(task)
         if not quiet:
             print(f"[{self.now():7.3f}] arrive {task}")
+
+    def _placement_feasible(self, task: Task,
+                            handle: Optional[TaskHandle]) -> bool:
+        """Resolve the task's footprint (kernel default when unset) and
+        reject at admission anything wider than any region that could ever
+        exist — it would otherwise sit in a queue forever and hang
+        ``drain()``.  With an elastic pool the ceiling is the whole grid
+        (the pool consolidates slices on demand, see ``RegionPool.tick``);
+        a static shell can never re-cut its floorplan, so the ceiling is
+        its widest region as built."""
+        if task.footprint is None:
+            try:
+                from repro.controller.kernels import get_kernel
+
+                task.footprint = get_kernel(task.kernel).footprint
+            except KeyError:
+                task.footprint = 1
+        if self.pool is not None:
+            n_dev = len(self.shell.devices)
+            if self.shell.floorplanner.overlapped:
+                ceiling = n_dev  # time-shared slices span the whole grid
+            else:
+                # consolidation keeps min_regions disjoint regions alive,
+                # each needing >= 1 device, so the widest slice the pool
+                # can ever build is the grid minus (min_regions - 1)
+                ceiling = max(1, n_dev - (self.pool.min_regions - 1))
+            what = (f"widest achievable region ({ceiling} of {n_dev} "
+                    f"devices at min_regions={self.pool.min_regions})")
+        else:
+            ceiling = max((len(r.devices) if r.devices is not None else 1
+                           for r in self.shell.regions), default=0)
+            what = f"widest region ({ceiling} devices, static floorplan)"
+        if task.footprint <= ceiling:
+            return True
+        task.status = TaskStatus.FAILED
+        self.failed.append(task)
+        err = ValueError(
+            f"task #{task.tid} footprint {task.footprint} exceeds the "
+            f"{what}; it can never be placed")
+        if handle is not None:
+            handle._fail(err)
+        return False
 
     def _enqueue(self, task: Task, requeue: bool = False):
         handle = self._handles.get(task.tid)
@@ -407,8 +473,13 @@ class Scheduler:
                 # 'preempting' forever (deadlock) and the flag would
                 # insta-preempt the next task launched there.
                 self._preempt_pending.discard(ev.region_id)
-                self.shell.regions[ev.region_id].cancel_preempt()
+                self.shell.region(ev.region_id).cancel_preempt()
+            if self.shell.region(ev.region_id).dispatchable:
+                self._idle_hint.add(ev.region_id)  # draining/retired
+                # regions never redispatch, so no hint to leak for them
             ev.task.deadline_missed = self._deadline_missed(ev.task)
+            if ev.task.deadline_missed:
+                self.deadline_misses_total += 1
             self.policy.on_task_done(ev.task)
             handle = self._handles.get(ev.task.tid)
             if handle is not None:
@@ -417,11 +488,13 @@ class Scheduler:
                 print(f"[{self.now():7.3f}] done   {ev.task} on R{ev.region_id}")
         elif ev.kind == EventKind.TASK_PREEMPTED:
             self._preempt_pending.discard(ev.region_id)
+            if self.shell.region(ev.region_id).dispatchable:
+                self._idle_hint.add(ev.region_id)
             self._enqueue(ev.task, requeue=True)  # paper: enqueue the
             if not quiet:                         # stopped task
                 print(f"[{self.now():7.3f}] preempt {ev.task} off R{ev.region_id}")
         elif ev.kind == EventKind.REGION_FAILED:
-            region = self.shell.regions[ev.region_id]
+            region = self.shell.region(ev.region_id)
             self._preempt_pending.discard(ev.region_id)
             self._dead_since[ev.region_id] = self.now()
             task = ev.task
@@ -445,7 +518,8 @@ class Scheduler:
         dispatched = False
         while True:
             idle = [r for r in self.shell.regions
-                    if r.alive and r.idle
+                    if r.dispatchable
+                    and (r.idle or r.rid in self._idle_hint)
                     and r.rid not in self._preempt_pending]
             if not idle:
                 break
@@ -456,6 +530,7 @@ class Scheduler:
             handle = self._handles.get(task.tid)
             if handle is not None and not handle._claim():
                 continue  # lost the race against a client-side cancel()
+            self._idle_hint.discard(region.rid)  # hint is single-use
             self._dispatch(region, task, quiet)
             dispatched = True
         if dispatched:
@@ -463,8 +538,11 @@ class Scheduler:
         if not self.cfg.preemption:
             return
         for candidate in self.policy.preempt_candidates():
+            # draining regions are excluded: their task is already being
+            # checkpoint-preempted by the pool's retirement path
             running = [r for r in self.shell.regions
-                       if r.alive and r.rid not in self._preempt_pending]
+                       if r.dispatchable
+                       and r.rid not in self._preempt_pending]
             victim = self.policy.choose_victim(candidate, running)
             if victim is not None:
                 self._preempt_pending.add(victim.rid)
@@ -505,7 +583,7 @@ class Scheduler:
         # keep their EWMA — the straggler must not escape detection just
         # because its fast peers finished their tasks already)
         candidates = [r for r in self.shell.regions
-                      if r.alive and r.stats.chunks >= 3]
+                      if r.dispatchable and r.stats.chunks >= 3]
         if len(candidates) < 2:
             return
         busy = [r for r in candidates if r.current_task is not None]
@@ -527,7 +605,9 @@ class Scheduler:
             return
         for rid, t_dead in list(self._dead_since.items()):
             if self.now() - t_dead >= self.cfg.repair_after_s:
-                self.shell.regions[rid].repair()
+                region = self.shell.region(rid)
+                if region.state is not RegionState.RETIRED:
+                    region.repair()
                 del self._dead_since[rid]
 
     def _maybe_checkpoint(self):
@@ -600,6 +680,26 @@ class Scheduler:
         with self._handles_lock:  # the loop thread may be pruning handles
             live_cancelled = sum(1 for h in self._handles.values()
                                  if h.cancelled())
+
+        # elastic-pool / capacity accounting: region-seconds is capacity
+        # consumed over the run's wall window (static n-region shell =
+        # n * wall); utilization divides the busy time actually attributed
+        # to regions by that capacity
+        if self.pool is not None:
+            pool_stats = self.pool.report(t0=self.t0, t1=self.t0 + wall)
+        else:
+            pool_stats = {
+                "elastic": False,
+                "n_regions": len(self.shell.regions),
+                "grows": 0, "shrinks": 0, "resizes": 0,
+                "resize_events": [],
+                "region_seconds": len(self.shell.regions) * wall,
+            }
+        busy_total = sum(r.stats.busy_s
+                         for r in self.shell._by_rid.values())
+        pool_stats["utilization"] = (
+            busy_total / pool_stats["region_seconds"]
+            if pool_stats["region_seconds"] > 0 else 0.0)
         es = self.shell.engine.stats
         # nested detail carries only what the top-level keys don't: one
         # source of truth per number (the two are sampled at different
@@ -637,5 +737,6 @@ class Scheduler:
             "prefetch_stale_drops": es.prefetch_stale_drops,
             "evictions": es.evictions,
             "dispatch_stall_s": es.total_stall_s,
+            "pool": pool_stats,
             "reconfig": detail,
         }

@@ -1,22 +1,29 @@
 """The shell (paper §4.1): the static infrastructure that owns the device
-grid, instantiates N reconfigurable regions, and provides global/per-region
+grid, instantiates the reconfigurable regions, and provides global/per-region
 resets.
 
-On a real pod the shell slices the device grid into disjoint sub-meshes
-(``make_region_mesh``); on this CPU container regions may share the single
-CpuDevice (``allow_overlap=True``), time-multiplexed — DESIGN.md §2.1(5).
-The number of regions is the shell build parameter (the TCL script input).
+On a real pod the shell slices the device grid into disjoint sub-meshes via
+the ``Floorplanner`` (every device lands in exactly one region — remainder
+devices are spread across the first regions rather than stranded); on this
+CPU container regions may share the single CpuDevice (``allow_overlap=True``),
+time-multiplexed — DESIGN.md §2.1(5).  The initial region count is the shell
+build parameter (the TCL script input), but — unlike the paper's fixed
+floorplan — the region list is *dynamic*: ``add_region``/``retire_region``
+let the elastic pool (``core/pool.py``, DESIGN.md §6) grow and shrink the
+pool at runtime while the shared reconfiguration plumbing survives.
 
-The shell also owns the reconfiguration plumbing shared by all regions: the
-``ReconfigEngine`` (LRU bitstream cache + single ICAP port) and the
-``BitstreamPrefetcher`` that generates bitstreams off the dispatch path.
+The shell also owns that plumbing: the ``ReconfigEngine`` (LRU bitstream
+cache + single ICAP port) and the ``BitstreamPrefetcher`` that generates
+bitstreams off the dispatch path.  Both are shared handles — regions added
+after construction reuse the same engine, cache, and prefetcher.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 
+from repro.core.floorplan import Floorplanner
 from repro.core.interrupts import InterruptController
 from repro.core.prefetch import BitstreamPrefetcher
 from repro.core.reconfig import ReconfigEngine
@@ -31,7 +38,8 @@ class Shell:
                  simulate_full_s: float = 0.0,
                  cache_capacity: Optional[int] = None,
                  prefetch: bool = True,
-                 prefetch_max_queue: int = 64):
+                 prefetch_max_queue: int = 64,
+                 region_widths: Optional[Sequence[int]] = None):
         self.devices = list(devices if devices is not None else jax.devices())
         self.interrupts = InterruptController()
         self.engine = ReconfigEngine(simulate_partial_s=simulate_partial_s,
@@ -41,25 +49,53 @@ class Shell:
         self.prefetcher = BitstreamPrefetcher(
             self.engine, max_queue=prefetch_max_queue, auto_start=False)
         self.prefetch_enabled = prefetch
-        self.regions: List[Region] = []
+        self.chunk_budget = chunk_budget
+        # test/bench hook inherited by regions added later (elastic grow)
+        self.region_slowdown_s: float = 0.0
+        self.floorplanner = Floorplanner(self.devices,
+                                         allow_overlap=allow_overlap)
+        self.regions: List[Region] = []     # active (non-retired) regions
+        self._by_rid: Dict[int, Region] = {}  # every region ever created
+        self._next_rid = 0
 
-        n_dev = len(self.devices)
-        if n_dev >= n_regions:
-            per = n_dev // n_regions
-            slices = [self.devices[i * per:(i + 1) * per]
-                      for i in range(n_regions)]
-        else:
-            if not allow_overlap:
-                raise ValueError(
-                    f"{n_regions} regions need >= {n_regions} devices "
-                    f"(have {n_dev}); pass allow_overlap=True to time-share")
-            slices = [self.devices for _ in range(n_regions)]
+        for devs in self.floorplanner.initial_plan(n_regions,
+                                                   widths=region_widths):
+            self.add_region(devices=devs)
 
-        for rid in range(n_regions):
-            self.regions.append(Region(
-                rid, self.engine, self.interrupts,
-                devices=slices[rid], geometry=(len(slices[rid]),),
-                chunk_budget=chunk_budget))
+    # -- dynamic region pool (DESIGN.md §6.1) ---------------------------
+    def add_region(self, devices=None, width: int = 1) -> Region:
+        """Create and start a new region on a floorplanned device slice
+        (``devices=None`` asks the floorplanner for a ``width``-wide one).
+        Region ids are monotonic and never reused; use ``region(rid)`` for
+        lookups — list position is not the id once the pool has resized."""
+        if devices is None:
+            devices = self.floorplanner.allocate(width)
+        rid = self._next_rid
+        self._next_rid += 1
+        r = Region(rid, self.engine, self.interrupts,
+                   devices=list(devices), geometry=(len(devices),),
+                   chunk_budget=self.chunk_budget)
+        r.slowdown_s = self.region_slowdown_s
+        self.floorplanner.bind(rid, devices)
+        self.regions.append(r)
+        self._by_rid[rid] = r
+        return r
+
+    def retire_region(self, rid: int) -> Region:
+        """Shut a region down and return its devices to the floorplanner.
+        Callers must have drained it first (``RegionPool`` does the safe
+        checkpoint-preempt drain); the object stays reachable via
+        ``region(rid)`` so late interrupts can still resolve it."""
+        r = self._by_rid[rid]
+        r.retire()
+        self.regions = [x for x in self.regions if x.rid != rid]
+        self.floorplanner.release(rid)
+        return r
+
+    def region(self, rid: int) -> Region:
+        """Region by id, including retired ones (interrupts may outlive the
+        region that raised them)."""
+        return self._by_rid[rid]
 
     # -- resets (paper: global reset + per-RR GPIO reset) -----------------
     def global_reset(self):
@@ -76,7 +112,7 @@ class Shell:
 
     def region_reset(self, rid: int):
         """Per-region reset: preempt whatever is running there."""
-        self.regions[rid].request_preempt()
+        self.region(rid).request_preempt()
 
     def shutdown(self):
         self.prefetcher.stop()

@@ -42,6 +42,10 @@ class Task:
     deadline_s: Optional[float] = None
     # WFQ policy + per-tenant metrics: which tenant submitted this task.
     tenant: str = "default"
+    # placement constraint (DESIGN.md §6.2): minimum region width (devices)
+    # this task needs.  None = inherit the kernel's declared
+    # ``KernelDef.footprint`` at admission (default 1).
+    footprint: Optional[int] = None
     tid: int = field(default_factory=lambda: next(_ids))
     status: TaskStatus = TaskStatus.PENDING
     # context of a preempted task (host-side committed copy)

@@ -17,6 +17,19 @@ a client thread (Poisson arrivals at ``--arrival-rate`` tasks/s) through
         --n-tasks 16 --regions 2 [--no-prefetch]
     PYTHONPATH=src python -m repro.launch.serve --mode scheduler \
         --policy wfq --open-loop --tenants 2 --arrival-rate 4
+
+``--autoscale`` puts the region pool under the elastic autoscaler
+(DESIGN.md §6): the shell starts at ``--min-regions`` and grows/shrinks
+between the ``--min-regions``/``--max-regions`` bounds as queue depth,
+turnaround p99, and deadline misses demand.  ``--burst N`` makes the
+open-loop client submit N tasks back-to-back per arrival gap (a bursty
+trace — the workload autoscaling is for).  ``--metrics-out PATH`` dumps
+the final ``Scheduler.report()`` JSON on drain/shutdown so CI and
+benchmarks consume structured metrics instead of scraping stdout:
+
+    PYTHONPATH=src python -m repro.launch.serve --mode scheduler \
+        --open-loop --autoscale --max-regions 3 --burst 4 \
+        --metrics-out metrics.json
 """
 from __future__ import annotations
 
@@ -75,18 +88,27 @@ def serve_task_stream(*, n_tasks: int = 16, n_regions: int = 2,
                       size: int = 48, rate_s: float = 1.0, seed: int = 0,
                       prefetch: bool = True, policy: str = "fcfs",
                       open_loop: bool = False, arrival_rate: float = 4.0,
-                      tenants: int = 1,
+                      tenants: int = 1, burst: int = 1,
+                      autoscale: bool = False, min_regions: int = 1,
+                      max_regions: int = 3, metrics_out: str = None,
                       cache_capacity: int = None, quiet: bool = False) -> dict:
     """Serve a random blur-task stream through the preemptive scheduler and
     return its report, including the async-reconfiguration statistics.
 
     Batch mode (default) replays pre-generated arrivals, exactly the paper
     harness.  ``open_loop=True`` submits the same tasks live — a client
-    thread with Poisson inter-arrival gaps (``arrival_rate`` tasks/s) calls
-    ``Scheduler.submit()`` against a ``run_forever()`` server loop, then
-    waits on every ``TaskHandle`` and drains.
+    thread calls ``Scheduler.submit()`` against a ``run_forever()`` server
+    loop (``burst`` tasks back-to-back per Poisson gap at ``arrival_rate``
+    bursts/s), then waits on every ``TaskHandle`` and drains.
+
+    ``autoscale=True`` starts the shell at ``min_regions`` and lets the
+    elastic ``RegionPool`` grow/shrink up to ``max_regions`` under load;
+    ``metrics_out`` writes the final report as JSON.
     """
+    import json
+
     from repro.controller.kernels import get_kernel
+    from repro.core.pool import Autoscaler, AutoscalerConfig, RegionPool
     from repro.core.scheduler import Scheduler, SchedulerConfig
     from repro.core.shell import Shell
     from repro.core.task import generate_random_tasks
@@ -122,9 +144,17 @@ def serve_task_stream(*, n_tasks: int = 16, n_regions: int = 2,
             rng, kernels, n_tasks, rate_s, arg_factory,
             tenants=tenant_names,
             deadline_slack=(1.0, 3.0) if policy == "edf" else None)
-    shell = Shell(n_regions=n_regions, chunk_budget=2, prefetch=prefetch,
-                  cache_capacity=cache_capacity)
-    sched = Scheduler(shell, SchedulerConfig(policy=policy))
+    pool = None
+    if autoscale:
+        shell = Shell(n_regions=min_regions, chunk_budget=2,
+                      prefetch=prefetch, cache_capacity=cache_capacity)
+        pool = RegionPool(shell, autoscaler=Autoscaler(AutoscalerConfig(
+            min_regions=min_regions, max_regions=max_regions,
+            grow_queue_depth=1.5, cooldown_s=0.3, idle_grace_s=0.4)))
+    else:
+        shell = Shell(n_regions=n_regions, chunk_budget=2, prefetch=prefetch,
+                      cache_capacity=cache_capacity)
+    sched = Scheduler(shell, SchedulerConfig(policy=policy), pool=pool)
 
     if not open_loop:
         rep = sched.run(tasks, quiet=True)
@@ -140,20 +170,24 @@ def serve_task_stream(*, n_tasks: int = 16, n_regions: int = 2,
             for geom in shell.geometries():
                 shell.engine.prewarm(kname, ex.args, geom)
 
-        for r in shell.regions:
-            r.slowdown_s = 0.02  # deterministic per-chunk work: fairness
-            # and turnaround measure scheduling, not μs-scale kernel noise
+        shell.region_slowdown_s = 0.02  # deterministic per-chunk work:
+        for r in shell.regions:        # fairness and turnaround measure
+            r.slowdown_s = 0.02        # scheduling, not μs-scale kernel
+            # noise; regions added later by the elastic pool inherit it
 
         server = threading.Thread(target=sched.run_forever,
                                   name="scheduler-loop", daemon=True)
         server.start()
         sched.wait_until_serving(timeout=10.0)  # t0 valid before deadlines
         handles = []
-        for t in tasks:
+        burst_n = max(1, burst)
+        for i, t in enumerate(tasks):
             if policy == "edf":
                 t.deadline_s = sched.now() + float(rng.uniform(1.0, 3.0))
             handles.append(sched.submit(t))
-            time.sleep(float(rng.exponential(1.0 / max(arrival_rate, 1e-6))))
+            if (i + 1) % burst_n == 0:  # burst boundary: open-loop gap
+                time.sleep(float(
+                    rng.exponential(1.0 / max(arrival_rate, 1e-6))))
         for h in handles:
             h.wait(timeout=120.0)
         rep = sched.drain(timeout=60.0)
@@ -163,6 +197,13 @@ def serve_task_stream(*, n_tasks: int = 16, n_regions: int = 2,
         rep["stranded_handles"] += sum(1 for h in handles if not h.done())
 
     shell.shutdown()
+    if metrics_out:
+        # structured metrics for CI/benchmarks (no stdout scraping); keys
+        # that are not JSON-serializable (none today) fall back to str()
+        with open(metrics_out, "w") as f:
+            json.dump(rep, f, indent=2, default=str)
+        if not quiet:
+            print(f"[serve] metrics written to {metrics_out}")
     if not quiet:
         mode = "open-loop" if open_loop else "batch"
         print(f"[serve] policy={rep['policy']} ({mode}) "
@@ -181,6 +222,13 @@ def serve_task_stream(*, n_tasks: int = 16, n_regions: int = 2,
               f"({rep['dispatch_stall_s']:.2f}s dispatch stall), "
               f"{rep['evictions']} evictions, "
               f"{rep['prefetch_stale_drops']} stale prefetches dropped")
+        p = rep["pool"]
+        if p.get("elastic"):
+            print(f"[serve] pool: {p['n_regions']} regions "
+                  f"[{p['min_regions']}..{p['max_regions']}], "
+                  f"{p['grows']} grows / {p['shrinks']} shrinks, "
+                  f"{p['region_seconds']:.2f} region-seconds "
+                  f"({p['utilization']:.0%} utilized)")
     return rep
 
 
@@ -203,6 +251,17 @@ def main():
                     help="open-loop Poisson arrival rate (tasks/s)")
     ap.add_argument("--tenants", type=int, default=1,
                     help="assign tasks round-robin to N tenants")
+    ap.add_argument("--burst", type=int, default=1,
+                    help="open-loop: submit N tasks back-to-back per "
+                         "arrival gap (bursty trace)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="elastic region pool: start at --min-regions and "
+                         "autoscale up to --max-regions under load")
+    ap.add_argument("--min-regions", type=int, default=1)
+    ap.add_argument("--max-regions", type=int, default=3)
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the final Scheduler.report() JSON here on "
+                         "drain/shutdown")
     ap.add_argument("--no-prefetch", action="store_true")
     ap.add_argument("--cache-capacity", type=int, default=None)
     args = ap.parse_args()
@@ -211,7 +270,11 @@ def main():
                           prefetch=not args.no_prefetch,
                           policy=args.policy, open_loop=args.open_loop,
                           arrival_rate=args.arrival_rate,
-                          tenants=args.tenants,
+                          tenants=args.tenants, burst=args.burst,
+                          autoscale=args.autoscale,
+                          min_regions=args.min_regions,
+                          max_regions=args.max_regions,
+                          metrics_out=args.metrics_out,
                           cache_capacity=args.cache_capacity)
         return
     cfg = get_config(args.arch)

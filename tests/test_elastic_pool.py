@@ -1,0 +1,401 @@
+"""Elastic region pool: runtime floorplanning, heterogeneous regions and
+placement, the load-driven autoscaler, and the grow -> drain -> shrink
+lifecycle (DESIGN.md §6)."""
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.controller.kernels import get_kernel
+from repro.core.floorplan import (FloorplanError, Floorplanner, partition,
+                                  partition_widths, widths_for_footprints)
+from repro.core.pool import (Autoscaler, AutoscalerConfig, PoolSignals,
+                             RegionPool)
+from repro.core.region import RegionState
+from repro.core.scheduler import Scheduler, SchedulerConfig
+from repro.core.shell import Shell
+from repro.core.task import Task, TaskStatus
+from repro.kernels.blur.ref import iterated_blur_ref
+from repro.kernels.blur.tasks import make_image
+
+SIZE = 30
+
+
+def _fake_devices(n):
+    return [object() for _ in range(n)]
+
+
+def _blur_task(rng, iters=1, priority=2, footprint=None):
+    img = make_image(rng, SIZE)
+    kd = get_kernel("MedianBlur")
+    return Task(kernel="MedianBlur",
+                args=kd.bundle(img, np.zeros_like(img), H=SIZE, W=SIZE,
+                               iters=iters),
+                priority=priority, footprint=footprint), img
+
+
+# ---------------------------------------------------------- floorplanning
+def test_partition_distributes_remainder():
+    devs = list(range(7))
+    slices = partition(devs, 3)
+    assert [len(s) for s in slices] == [3, 2, 2]
+    assert [d for s in slices for d in s] == devs  # full coverage, in order
+
+
+def test_partition_widths_heterogeneous_and_covering():
+    devs = list(range(6))
+    slices = partition_widths(devs, [3, 1])
+    # remainder (2 devices) spread across the slices in order
+    assert [len(s) for s in slices] == [4, 2]
+    assert [d for s in slices for d in s] == devs
+    with pytest.raises(FloorplanError):
+        partition_widths(devs, [5, 3])  # does not fit
+    with pytest.raises(FloorplanError):
+        partition_widths(devs, [0, 6])  # empty region
+
+
+def test_widths_for_footprints_matches_workload():
+    # two regions over 4 devices for kernels declaring footprints 4/1/1:
+    # the wide kernel's target shrinks until the plan fits, then covers
+    assert widths_for_footprints([4, 1, 1], 2, 4) == [3, 1]
+    assert widths_for_footprints([2, 2], 2, 6) == [3, 3]
+    assert widths_for_footprints([], 2, 5) == [3, 2]
+    with pytest.raises(FloorplanError):
+        widths_for_footprints([1], 3, 2)  # 3 disjoint regions on 2 devices
+
+
+def test_shell_remainder_devices_not_stranded():
+    devs = _fake_devices(5)
+    shell = Shell(n_regions=2, devices=devs)
+    try:
+        assert sorted(len(r.devices) for r in shell.regions) == [2, 3]
+        covered = {id(d) for r in shell.regions for d in r.devices}
+        assert covered == {id(d) for d in devs}
+        assert shell.floorplanner.coverage_ok()
+    finally:
+        shell.shutdown()
+
+
+def test_shell_more_regions_than_devices_requires_overlap():
+    with pytest.raises(ValueError, match="allow_overlap=True"):
+        Shell(n_regions=3, devices=_fake_devices(2), allow_overlap=False)
+    shell = Shell(n_regions=3, devices=_fake_devices(2), allow_overlap=True)
+    try:
+        assert len(shell.regions) == 3
+        assert shell.floorplanner.overlapped
+    finally:
+        shell.shutdown()
+
+
+def test_inject_failure_repair_stats_roundtrip(rng):
+    t, _ = _blur_task(rng, iters=1)
+    shell = Shell(n_regions=1, chunk_budget=4)
+    try:
+        sched = Scheduler(shell, SchedulerConfig(preemption=False))
+        sched.run([t], quiet=True)
+        region = shell.regions[0]
+        reconfigs, kernels_run = region.stats.reconfigs, region.stats.kernels_run
+        assert kernels_run == 1
+        region.inject_failure()
+        assert not region.alive and not region.dispatchable
+        region.repair()
+        assert region.alive and region.dispatchable
+        assert region.state is RegionState.ACTIVE
+        # stats survive the failure/repair round-trip (same Region object)
+        assert region.stats.reconfigs == reconfigs
+        assert region.stats.kernels_run == kernels_run
+    finally:
+        shell.shutdown()
+
+
+# ------------------------------------------------------------- autoscaler
+def test_autoscaler_config_validation():
+    with pytest.raises(ValueError):
+        AutoscalerConfig(min_regions=0).validate()
+    with pytest.raises(ValueError):
+        AutoscalerConfig(min_regions=3, max_regions=2).validate()
+    with pytest.raises(ValueError):
+        AutoscalerConfig(grow_queue_depth=0).validate()
+    with pytest.raises(ValueError):
+        AutoscalerConfig(window=0).validate()
+
+
+def test_autoscaler_grow_shrink_with_hysteresis():
+    a = Autoscaler(AutoscalerConfig(min_regions=1, max_regions=3,
+                                    grow_queue_depth=2.0, cooldown_s=1.0,
+                                    idle_grace_s=1.0))
+    # queue pressure -> grow
+    assert a.decide(PoolSignals(now=0.0, n_regions=1, n_idle=0,
+                                queue_depth=5)) == +1
+    # still pressured, but inside the resize cooldown -> hold
+    assert a.decide(PoolSignals(now=0.5, n_regions=2, n_idle=0,
+                                queue_depth=9)) == 0
+    assert a.decide(PoolSignals(now=1.2, n_regions=2, n_idle=0,
+                                queue_depth=9)) == +1
+    # at the max bound, pressure no longer grows
+    assert a.decide(PoolSignals(now=3.0, n_regions=3, n_idle=0,
+                                queue_depth=99)) == 0
+    # quiet, but the idle grace must elapse before any shrink
+    assert a.decide(PoolSignals(now=4.0, n_regions=3, n_idle=2,
+                                queue_depth=0)) == 0
+    assert a.decide(PoolSignals(now=4.6, n_regions=3, n_idle=2,
+                                queue_depth=0)) == 0
+    assert a.decide(PoolSignals(now=5.1, n_regions=3, n_idle=2,
+                                queue_depth=0)) == -1
+    # a burst resets the idle clock
+    assert a.decide(PoolSignals(now=7.0, n_regions=2, n_idle=1,
+                                queue_depth=0)) == 0
+    assert a.decide(PoolSignals(now=7.5, n_regions=2, n_idle=0,
+                                queue_depth=1)) == 0
+    assert a.decide(PoolSignals(now=8.2, n_regions=2, n_idle=1,
+                                queue_depth=0)) == 0  # grace restarted
+    # min bound: never shrinks below min_regions
+    b = Autoscaler(AutoscalerConfig(min_regions=1, max_regions=3,
+                                    idle_grace_s=0.0, cooldown_s=0.0))
+    assert b.decide(PoolSignals(now=0.0, n_regions=1, n_idle=1,
+                                queue_depth=0)) == 0
+
+
+def test_autoscaler_deadline_miss_and_p99_trigger_grow():
+    a = Autoscaler(AutoscalerConfig(min_regions=1, max_regions=3,
+                                    grow_queue_depth=100.0, cooldown_s=0.0,
+                                    target_p99_s=1.0))
+    assert a.decide(PoolSignals(now=0.0, n_regions=1, n_idle=0,
+                                queue_depth=0, p99_s=2.0)) == +1
+    assert a.decide(PoolSignals(now=1.0, n_regions=2, n_idle=0,
+                                queue_depth=0, p99_s=0.1,
+                                deadline_misses=1)) == +1
+    # the miss was consumed; no new misses -> no more growth
+    assert a.decide(PoolSignals(now=2.0, n_regions=3, n_idle=0,
+                                queue_depth=0, p99_s=0.1,
+                                deadline_misses=1)) == 0
+
+
+# ------------------------------------------------- placement feasibility
+def test_footprint_placement_lands_on_wide_region(rng):
+    # heterogeneous floorplan: a 2-wide and a 1-wide region
+    shell = Shell(n_regions=2, devices=_fake_devices(3),
+                  region_widths=[2, 1], chunk_budget=4)
+    try:
+        assert [len(r.devices) for r in shell.regions] == [2, 1]
+        wide, _ = _blur_task(rng, footprint=2)
+        narrow, _ = _blur_task(rng, footprint=1)
+        sched = Scheduler(shell, SchedulerConfig(preemption=False))
+        rep = sched.run([wide, narrow], quiet=True)
+        assert rep["n_done"] == 2
+        assert wide.region_history == [0]  # only region 0 is wide enough
+    finally:
+        shell.shutdown()
+
+
+def test_infeasible_footprint_fails_at_admission(rng):
+    shell = Shell(n_regions=1, devices=_fake_devices(2), chunk_budget=4)
+    try:
+        t, _ = _blur_task(rng, footprint=5)  # wider than the whole grid
+        ok, _ = _blur_task(rng)
+        sched = Scheduler(shell, SchedulerConfig(preemption=False))
+        rep = sched.run([t, ok], quiet=True)
+        assert t.status is TaskStatus.FAILED
+        assert t in sched.failed
+        assert ok.status is TaskStatus.DONE and rep["n_done"] == 1
+    finally:
+        shell.shutdown()
+
+
+def test_static_shell_rejects_wider_than_widest_region(rng):
+    # fits the grid (8 devices) but not any region of the STATIC 4+4
+    # floorplan, which can never be re-cut: must fail at admission
+    # instead of sitting in the queue forever and hanging drain()
+    shell = Shell(n_regions=2, devices=_fake_devices(8), chunk_budget=4)
+    try:
+        t, _ = _blur_task(rng, footprint=5)
+        sched = Scheduler(shell, SchedulerConfig(preemption=False))
+        rep = sched.run([t], quiet=True)
+        assert t.status is TaskStatus.FAILED and rep["n_done"] == 0
+    finally:
+        shell.shutdown()
+
+
+def test_pool_consolidates_slices_for_wide_footprint(rng):
+    # 2+2 floorplan, task needs 3: the pool must re-cut the idle slices
+    # (footprint-matched replan — no region churn needed here) so the
+    # task can be placed (DESIGN.md §6.2)
+    shell = Shell(n_regions=2, devices=_fake_devices(4), chunk_budget=4,
+                  allow_overlap=False)
+    try:
+        t, _ = _blur_task(rng, footprint=3)
+        pool = RegionPool(shell, min_regions=1, max_regions=2)
+        sched = Scheduler(shell, SchedulerConfig(preemption=False),
+                          pool=pool)
+        rep = sched.run([t], quiet=True)
+        assert t.status is TaskStatus.DONE and rep["n_done"] == 1
+        assert max(len(r.devices) for r in shell.regions) >= 3
+        assert shell.floorplanner.coverage_ok()
+    finally:
+        shell.shutdown()
+
+
+def test_rescue_respects_min_regions_and_admission_ceiling(rng):
+    # min_regions=2 on 4 devices: the widest achievable region is 3 (the
+    # other region keeps >= 1 device).  footprint=3 is served without the
+    # pool ever dropping below two regions; footprint=4 is rejected at
+    # admission instead of starving in the queue.
+    shell = Shell(n_regions=2, devices=_fake_devices(4), chunk_budget=4,
+                  allow_overlap=False)
+    try:
+        fits, _ = _blur_task(rng, footprint=3)
+        too_wide, _ = _blur_task(rng, footprint=4)
+        pool = RegionPool(shell, min_regions=2, max_regions=2)
+        sched = Scheduler(shell, SchedulerConfig(preemption=False),
+                          pool=pool)
+        rep = sched.run([fits, too_wide], quiet=True)
+        assert fits.status is TaskStatus.DONE and rep["n_done"] == 1
+        assert too_wide.status is TaskStatus.FAILED
+        assert len(shell.regions) >= 2  # min bound never violated
+        assert shell.floorplanner.coverage_ok()
+    finally:
+        shell.shutdown()
+
+
+# ------------------------------------------------------ pool mechanics
+def test_replan_widens_idle_regions_after_retirement():
+    devs = _fake_devices(6)
+    shell = Shell(n_regions=3, devices=devs, allow_overlap=False)
+    pool = RegionPool(shell, min_regions=1, max_regions=3)
+    try:
+        assert [len(r.devices) for r in shell.regions] == [2, 2, 2]
+        victim = shell.regions[2]
+        pool.begin_retire(victim)          # idle -> no preemption needed
+        assert victim.state is RegionState.DRAINING
+        retired = pool.finalize_retirements()
+        assert retired == [victim.rid]
+        assert victim.state is RegionState.RETIRED
+        # survivors were widened over the freed slice; coverage holds
+        assert [len(r.devices) for r in shell.regions] == [3, 3]
+        assert shell.floorplanner.coverage_ok()
+        # geometry changed -> loaded bitstream invalidated
+        assert all(r.loaded is None for r in shell.regions)
+        assert pool.shrinks == 1 and pool.grows == 0
+    finally:
+        shell.shutdown()
+
+
+@pytest.mark.parametrize("allow_overlap", [False, True])
+def test_grow_carves_slice_from_idle_regions(allow_overlap):
+    # carving must be preferred over time-sharing even when overlap is
+    # allowed: flipping to an overlapped grid is one-way and would disable
+    # floorplanning (free devices, replans, real footprint capacity)
+    shell = Shell(n_regions=2, devices=_fake_devices(4),
+                  allow_overlap=allow_overlap)
+    pool = RegionPool(shell, min_regions=1, max_regions=3)
+    try:
+        region = pool.grow()
+        assert region is not None
+        assert len(shell.regions) == 3
+        assert sorted(len(r.devices) for r in shell.regions) == [1, 1, 2]
+        assert shell.floorplanner.coverage_ok()
+        assert not shell.floorplanner.overlapped
+        # max bound respected
+        assert pool.grow() is None or len(shell.regions) == 3
+    finally:
+        shell.shutdown()
+
+
+def test_region_seconds_window_accounting():
+    shell = Shell(n_regions=1, devices=_fake_devices(1))
+    pool = RegionPool(shell, min_regions=1, max_regions=2)
+    try:
+        pool._spans = {0: [0.0, 5.0], 1: [2.0, None]}
+        assert pool.region_seconds(0.0, 10.0) == pytest.approx(5.0 + 8.0)
+        assert pool.region_seconds(4.0, 6.0) == pytest.approx(1.0 + 2.0)
+        assert pool.region_seconds(6.0, 7.0) == pytest.approx(1.0)
+    finally:
+        shell.shutdown()
+
+
+def _wait_for(cond, timeout=5.0, dt=0.01):
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < timeout:
+        if cond():
+            return True
+        time.sleep(dt)
+    return cond()
+
+
+def test_grow_drain_shrink_cycle_resumes_preempted_task(rng):
+    """The full elastic cycle, deterministically: grow the pool to two
+    regions, start a long task, drain-retire the region running it — the
+    task is checkpoint-preempted, requeued, and must finish with a correct
+    result on the surviving region; the pool ends back at one region."""
+    t_long, img = _blur_task(rng, iters=16, priority=2)
+    shell = Shell(n_regions=1, chunk_budget=1)
+    shell.region_slowdown_s = 0.05
+    for r in shell.regions:
+        r.slowdown_s = 0.05
+    pool = RegionPool(shell, min_regions=1, max_regions=2)
+    sched = Scheduler(shell, SchedulerConfig(preemption=True), pool=pool)
+    server = threading.Thread(target=sched.run_forever, daemon=True)
+    server.start()
+    try:
+        assert sched.wait_until_serving(timeout=10.0)
+        pool.request_grow()
+        assert _wait_for(lambda: len(shell.regions) == 2)
+        assert pool.grows == 1
+
+        handle = sched.submit(t_long)
+        assert _wait_for(lambda: t_long.status is TaskStatus.RUNNING)
+        first_rid = t_long.region_history[0]
+        pool.request_shrink(first_rid)   # drain the region running it
+
+        out = handle.result(timeout=60.0)
+        assert t_long.n_preemptions >= 1, "drain never preempted the task"
+        assert len(set(t_long.region_history)) == 2, \
+            "task did not migrate to the surviving region"
+        ref = np.asarray(iterated_blur_ref(jnp.asarray(img), 16, "median"))
+        np.testing.assert_allclose(out[0], ref, atol=1e-5)  # even iters:
+        # the blur ping-pongs buffers, so the final image is in bufs[0]
+
+        assert _wait_for(lambda: len(shell.regions) == 1)
+        assert shell.region(first_rid).state is RegionState.RETIRED
+        assert pool.shrinks == 1
+        rep = sched.drain(timeout=30.0)
+        assert rep["stranded_handles"] == 0
+        assert rep["pool"]["elastic"] and rep["pool"]["resizes"] == 2
+    finally:
+        sched.shutdown(timeout=10.0)
+        server.join(timeout=10.0)
+        shell.shutdown()
+
+
+def test_autoscaler_grows_under_burst_and_shrinks_when_quiet(rng):
+    tasks = [_blur_task(rng, iters=2)[0] for _ in range(6)]
+    shell = Shell(n_regions=1, chunk_budget=1)
+    shell.region_slowdown_s = 0.02
+    for r in shell.regions:
+        r.slowdown_s = 0.02
+    pool = RegionPool(shell, autoscaler=Autoscaler(AutoscalerConfig(
+        min_regions=1, max_regions=2, grow_queue_depth=1.0,
+        cooldown_s=0.05, idle_grace_s=0.05)))
+    sched = Scheduler(shell, SchedulerConfig(), pool=pool)
+    server = threading.Thread(target=sched.run_forever, daemon=True)
+    server.start()
+    try:
+        assert sched.wait_until_serving(timeout=10.0)
+        handles = [sched.submit(t) for t in tasks]
+        for h in handles:
+            h.result(timeout=60.0)
+        assert pool.grows >= 1, "burst never grew the pool"
+        # quiet line: the idle-grace shrink fires within a few loop ticks
+        assert _wait_for(lambda: pool.shrinks >= 1, timeout=5.0)
+        rep = sched.drain(timeout=30.0)
+        assert rep["n_done"] == len(tasks)
+        assert rep["stranded_handles"] == 0
+        assert rep["pool"]["elastic"]
+        assert rep["pool"]["region_seconds"] > 0
+        assert 0.0 <= rep["pool"]["utilization"]
+    finally:
+        sched.shutdown(timeout=10.0)
+        server.join(timeout=10.0)
+        shell.shutdown()
