@@ -1,9 +1,11 @@
 """Paper Fig. 3: service time per priority queue, +-preemption, 1 vs 2 RRs,
 three arrival rates (largest size, 30 tasks) — plus a policy arm comparing
 fcfs vs edf vs wfq on the same task stream (p50/p99 turnaround, deadline
-misses, fairness) and an elastic arm comparing static-1RR / static-2RR /
+misses, fairness), an elastic arm comparing static-1RR / static-2RR /
 autoscaled pools on a bursty open-loop trace (p99 turnaround vs
-region-seconds consumed)."""
+region-seconds consumed), and a cluster arm comparing 1-shell / 2-shell /
+2-shell-with-forced-migration fabrics on the same trace (DESIGN.md §7),
+asserting migrated outputs stay bit-identical to the 1-shell reference."""
 from __future__ import annotations
 
 import json
@@ -200,6 +202,134 @@ def run_elastic_cell(arm: str, *, n_bursts: int = 3, burst: int = 6,
                   "max_regions": max_regions}
     rep["region_seconds"] = rep["pool"]["region_seconds"]
     return rep
+
+
+# ------------------------------------------------------------- cluster
+def run_cluster_cell(arm: str, *, n_bursts: int = 3, burst: int = 8,
+                     gap_s: float = 1.0, size: int = 48, seed: int = 23,
+                     slowdown: float = 0.02, iters: int = 2):
+    """One arm of the cluster comparison on the deterministic bursty
+    trace: ``1shell`` / ``2shell`` (router spreads, no migration) /
+    ``2shell-migrate`` (additionally checkpoint-migrates one *running*
+    task per burst off the busiest shell).  Returns ``(cell, outputs)``
+    where ``outputs[i]`` is task i's result buffer — the migrate arm's
+    migrated outputs are compared bit-for-bit against the 1shell arm's.
+    """
+    import time as _time
+
+    from repro.cluster import ClusterFrontend
+    from repro.controller.kernels import get_kernel
+    from repro.core.task import Task
+    from repro.kernels.blur.tasks import make_image
+
+    rng = np.random.default_rng(seed)
+    kernels = ["MedianBlur", "GaussianBlur"]
+
+    def make_task(i):
+        k = kernels[i % len(kernels)]
+        img = make_image(rng, size)
+        kd = get_kernel(k)
+        return Task(kernel=k,
+                    args=kd.bundle(img, np.zeros_like(img), H=size, W=size,
+                                   iters=iters),
+                    priority=int(rng.integers(5)))
+
+    tasks = [make_task(i) for i in range(n_bursts * burst)]
+    fe = ClusterFrontend(n_shells=1 if arm == "1shell" else 2,
+                         regions_per_shell=1, rebalance=False,
+                         chunk_budget=2)
+    for node in fe.nodes:
+        node.shell.region_slowdown_s = slowdown
+        for r in node.shell.regions:
+            r.slowdown_s = slowdown
+        for kname in kernels:
+            ex = next(t for t in tasks if t.kernel == kname)
+            for geom in node.shell.geometries():
+                node.shell.engine.prewarm(kname, ex.args, geom)
+
+    handles = []
+    forced = 0
+    for b in range(n_bursts):
+        for i in range(burst):
+            handles.append(fe.submit(tasks[b * burst + i]))
+        if arm == "2shell-migrate":
+            # one deterministic checkpoint-migration per burst: preempt a
+            # running task on the busiest shell, resume it on the other
+            t0 = _time.perf_counter()
+            while _time.perf_counter() - t0 < 5.0:
+                if fe.migrate(prefer="running"):
+                    forced += 1
+                    break
+                _time.sleep(0.005)
+        if b < n_bursts - 1:
+            _time.sleep(gap_s)
+    for h in handles:
+        h.wait(timeout=180.0)
+    outputs = [np.asarray(h.result(timeout=1.0)[0]) for h in handles]
+    migrated = [i for i, h in enumerate(handles) if h.n_migrations > 0]
+    rep = fe.shutdown()
+    cell = {k: rep[k] for k in (
+        "n_shells", "router", "wall_s", "throughput_tps",
+        "turnaround_p50_s", "turnaround_p99_s", "lost_tasks",
+        "stranded_handles", "migrations_completed", "failovers")}
+    cell["n_done"] = rep["n_done"]
+    cell["region_seconds"] = sum(s["region_seconds"]
+                                 for s in rep["per_shell"].values())
+    cell["cfg"] = {"arm": arm, "n_bursts": n_bursts, "burst": burst,
+                   "gap_s": gap_s, "size": size, "seed": seed,
+                   "iters": iters}
+    cell["migrated_tasks"] = migrated
+    return cell, outputs
+
+
+def measure_cluster(printer=print, cache_path: str = "bench_cluster.json",
+                    use_cache: bool = True, **cell_kwargs):
+    """1-shell vs 2-shell vs 2-shell-with-migration on the same bursty
+    trace: the 2-shell fabric should hold p99 well under the 1-shell
+    build (the acceptance bar is <= 0.75x), and every migrated task's
+    output must match the 1-shell reference bit-for-bit (checkpoint
+    resume is deterministic replay)."""
+    if use_cache and os.path.exists(cache_path):
+        with open(cache_path) as f:
+            results = json.load(f)
+    else:
+        results = []
+        reference = None
+        for arm in ("1shell", "2shell", "2shell-migrate"):
+            cell, outputs = run_cluster_cell(arm, **cell_kwargs)
+            if arm == "1shell":
+                reference = outputs
+            migrated = cell["migrated_tasks"]
+            cell["migrated_bit_identical"] = (
+                bool(migrated)
+                and all(np.array_equal(outputs[i], reference[i])
+                        for i in migrated))
+            results.append(cell)
+        with open(cache_path, "w") as f:
+            json.dump(results, f)
+    printer("# cluster arm: 1shell vs 2shell vs 2shell-migrate on the "
+            "same bursty trace (name,us_per_call,derived)")
+    for r in results:
+        arm = r["cfg"]["arm"]
+        printer(f"cluster/{arm}_turnaround,"
+                f"{r['turnaround_p50_s']*1e6:.0f},"
+                f"p99_us={r['turnaround_p99_s']*1e6:.0f};"
+                f"n_done={r['n_done']};"
+                f"migrations={r['migrations_completed']};"
+                f"lost={r['lost_tasks']};"
+                f"region_s={r['region_seconds']:.2f}")
+    by_arm = {r["cfg"]["arm"]: r for r in results}
+    if "1shell" in by_arm and "2shell" in by_arm:
+        s1, s2 = by_arm["1shell"], by_arm["2shell"]
+        ratio = (s2["turnaround_p99_s"] /
+                 max(s1["turnaround_p99_s"], 1e-9))
+        mig = by_arm.get("2shell-migrate", {})
+        printer(f"cluster/headline,{s2['turnaround_p99_s']*1e6:.0f},"
+                f"p99_vs_1shell={ratio:.2f}x;"
+                f"migrations={mig.get('migrations_completed', 0)};"
+                f"migrated_bit_identical="
+                f"{mig.get('migrated_bit_identical', False)}")
+    return results
 
 
 def measure_elastic(printer=print, cache_path: str = "bench_elastic.json",

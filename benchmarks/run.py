@@ -54,6 +54,13 @@ def main() -> None:
     else:
         bench_service_time.measure_elastic(use_cache=not args.no_cache)
 
+    # cluster fabric arm (1-shell vs 2-shell vs 2-shell-with-migration on
+    # the same bursty trace, DESIGN.md §7); same fast-mode caching contract
+    if args.fast and not os.path.exists("bench_cluster.json"):
+        print("cluster/skipped,0,fast-mode")
+    else:
+        bench_service_time.measure_cluster(use_cache=not args.no_cache)
+
     if args.fast and not os.path.exists("bench_sweep.json"):
         print("sweep/skipped,0,fast-mode")
         return

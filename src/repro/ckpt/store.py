@@ -5,6 +5,14 @@ fsync, then atomically rename — a crash mid-save leaves the previous
 checkpoint intact.  ``AsyncCheckpointer`` runs commits on a writer thread so
 the training loop never blocks (checkpoint/restart is the first line of
 fault tolerance at pod scale).
+
+Integrity: the sidecar records the leaf count and a CRC32 per leaf, and
+``load_pytree`` verifies both before handing arrays back.  Cross-shell task
+migration (``repro/cluster``) resumes a preempted kernel from exactly these
+files — a silently corrupt checkpoint would resurface as a wrong result on
+a *different* shell, far from the fault, so corruption must fail the load
+loudly (``CheckpointCorruptError``) instead.  ``DoubleBufferedCheckpointer``
+treats a corrupt buffer like a torn sidecar: the other buffer stays valid.
 """
 from __future__ import annotations
 
@@ -13,10 +21,17 @@ import os
 import queue
 import threading
 import time
+import zipfile
+import zlib
 from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+class CheckpointCorruptError(ValueError):
+    """The on-disk checkpoint does not match its sidecar (torn write,
+    bit rot, or a truncated copy) and must not be resumed from."""
 
 
 def _flatten(tree: Any):
@@ -24,8 +39,16 @@ def _flatten(tree: Any):
     return leaves, treedef
 
 
+def _checksum(arr: np.ndarray) -> str:
+    return f"{zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xffffffff:08x}"
+
+
 def save_pytree(path: str, tree: Any, meta: Optional[dict] = None):
-    """Atomic pytree save: <path>.npz (+ sidecar .json), committed by rename."""
+    """Atomic pytree save: <path>.npz (+ sidecar .json), committed by rename.
+
+    The pair commits in two renames (arrays, then sidecar); a crash between
+    them leaves a mismatched pair that ``load_pytree`` rejects by checksum,
+    which the double-buffered restore treats as an invalid buffer."""
     leaves, treedef = _flatten(tree)
     arrays = {f"leaf_{i}": np.asarray(jax.device_get(x))
               for i, x in enumerate(leaves)}
@@ -36,6 +59,8 @@ def save_pytree(path: str, tree: Any, meta: Optional[dict] = None):
         os.fsync(f.fileno())
     os.replace(tmp, path)  # the atomic 'valid flag flip'
     sidecar = {"treedef": str(treedef), "n_leaves": len(leaves),
+               "checksums": [_checksum(arrays[f"leaf_{i}"])
+                             for i in range(len(leaves))],
                "meta": meta or {}, "t": time.time()}
     tmp2 = path + ".json.tmp"
     with open(tmp2, "w") as f:
@@ -45,14 +70,49 @@ def save_pytree(path: str, tree: Any, meta: Optional[dict] = None):
     os.replace(tmp2, path + ".json")
 
 
-def load_pytree(path: str, like: Any) -> Any:
-    """Load into the structure of ``like`` (shapes/dtypes validated)."""
-    with np.load(path) as z:
-        leaves = [z[f"leaf_{i}"] for i in range(len(z.files))]
+def load_pytree(path: str, like: Any, verify: bool = True) -> Any:
+    """Load into the structure of ``like`` (shapes/dtypes validated).
+
+    ``verify=True`` (default) checks the arrays against the sidecar: the
+    leaf count must match and every leaf's CRC32 must equal the recorded
+    one; any mismatch — or an unreadable archive — raises
+    ``CheckpointCorruptError``.  A checkpoint without a sidecar (pre-
+    integrity files) loads with structural validation only."""
+    try:
+        with np.load(path) as z:
+            leaves = [z[f"leaf_{i}"] for i in range(len(z.files))]
+    except (zipfile.BadZipFile, OSError, KeyError, ValueError) as e:
+        raise CheckpointCorruptError(
+            f"checkpoint {path} is unreadable: {e}") from e
     ref_leaves, treedef = _flatten(like)
     if len(leaves) != len(ref_leaves):
         raise ValueError(f"checkpoint has {len(leaves)} leaves, "
                          f"expected {len(ref_leaves)}")
+    sidecar_path = path + ".json"
+    if verify and os.path.exists(sidecar_path):
+        try:
+            with open(sidecar_path) as f:
+                sc = json.load(f)
+        except (json.JSONDecodeError, OSError) as e:
+            raise CheckpointCorruptError(
+                f"checkpoint sidecar {sidecar_path} is unreadable: {e}"
+            ) from e
+        if sc.get("n_leaves") != len(leaves):
+            raise CheckpointCorruptError(
+                f"checkpoint {path} has {len(leaves)} leaves but its "
+                f"sidecar recorded {sc.get('n_leaves')}")
+        sums = sc.get("checksums")
+        if sums is not None:
+            if len(sums) != len(leaves):
+                raise CheckpointCorruptError(
+                    f"checkpoint {path} sidecar lists {len(sums)} "
+                    f"checksums for {len(leaves)} leaves")
+            for i, (leaf, want) in enumerate(zip(leaves, sums)):
+                got = _checksum(leaf)
+                if got != want:
+                    raise CheckpointCorruptError(
+                        f"checkpoint {path} leaf_{i} checksum mismatch "
+                        f"(got {got}, sidecar says {want})")
     return jax.tree.unflatten(treedef, leaves)
 
 
@@ -75,7 +135,7 @@ class DoubleBufferedCheckpointer:
         return path
 
     def restore(self, like: Any) -> Tuple[Optional[Any], Optional[dict]]:
-        best, best_t, best_meta = None, -1.0, None
+        slots = []
         for i in (0, 1):
             p = self._slot(i)
             if not (os.path.exists(p) and os.path.exists(p + ".json")):
@@ -85,11 +145,16 @@ class DoubleBufferedCheckpointer:
                     sc = json.load(f)
             except (json.JSONDecodeError, OSError):
                 continue  # torn sidecar: the other buffer stays valid
-            if sc["t"] > best_t:
-                best, best_t, best_meta = p, sc["t"], sc.get("meta")
-        if best is None:
-            return None, None
-        return load_pytree(best, like), best_meta
+            slots.append((sc["t"], p, sc.get("meta")))
+        # newest commit first; a corrupt newest buffer (torn arrays/sidecar
+        # pair) falls back to the older one — the paper's valid-flag
+        # protocol with the checksum as the validity witness
+        for _, p, meta in sorted(slots, reverse=True):
+            try:
+                return load_pytree(p, like), meta
+            except CheckpointCorruptError:
+                continue
+        return None, None
 
 
 class AsyncCheckpointer:

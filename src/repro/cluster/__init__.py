@@ -1,0 +1,16 @@
+"""Multi-shell cluster fabric (DESIGN.md §7): N ``Shell``+``Scheduler``
+nodes behind one ``ClusterFrontend.submit()`` API, with a pluggable global
+router, checkpoint-based cross-shell task migration, and heartbeat-driven
+failover."""
+from repro.cluster.frontend import (ClusterError, ClusterFrontend,
+                                    ClusterTaskHandle)
+from repro.cluster.node import ClusterNode, NodePowerModel
+from repro.cluster.router import (ROUTER_NAMES, BitstreamAffinity,
+                                  LeastLoaded, PowerAware, RouterPolicy,
+                                  make_router_policy)
+
+__all__ = [
+    "ClusterError", "ClusterFrontend", "ClusterTaskHandle", "ClusterNode",
+    "NodePowerModel", "ROUTER_NAMES", "BitstreamAffinity", "LeastLoaded",
+    "PowerAware", "RouterPolicy", "make_router_policy",
+]

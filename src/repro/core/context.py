@@ -112,6 +112,9 @@ class Committed:
     seqno: int
     context: Any          # ContextRecord (host numpy copies)
     payload: Any          # kernel state pytree (e.g. partial output buffers)
+    # which task committed this snapshot: failover recovery must never
+    # resume task X from a stale commit task Y left in the same bank
+    tid: Optional[int] = None
 
 
 class ContextBank:
@@ -131,7 +134,7 @@ class ContextBank:
         self._lock = threading.Lock()
         self.interrupt_next_commit = False  # test hook
 
-    def commit(self, context, payload=None) -> int:
+    def commit(self, context, payload=None, tid=None) -> int:
         with self._lock:
             self._seq += 1
             target = (self._active + 1) % 2
@@ -139,7 +142,8 @@ class ContextBank:
             host_ctx = jax.tree.map(lambda x: jax.device_get(x), context)
             host_payload = (jax.tree.map(lambda x: x, payload)
                             if payload is not None else None)
-            self._buffers[target] = Committed(self._seq, host_ctx, host_payload)
+            self._buffers[target] = Committed(self._seq, host_ctx,
+                                              host_payload, tid=tid)
             if self.interrupt_next_commit:
                 # simulate the asynchronous reset landing mid-save: the
                 # active index is NOT flipped -> previous commit stays valid

@@ -264,7 +264,8 @@ class Region:
                 # save context + partial outputs through the bank (BRAM) and
                 # hand the committed copy back to the scheduler
                 self.bank.commit(ctx, payload=tuple(
-                    np.asarray(jax.device_get(b)) for b in bufs))
+                    np.asarray(jax.device_get(b)) for b in bufs),
+                    tid=task.tid)
                 task.saved_context = self.bank.restore()
                 task.status = TaskStatus.PREEMPTED
                 task.n_preemptions += 1

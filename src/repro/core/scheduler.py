@@ -151,6 +151,13 @@ class Scheduler:
         self._hinted = set()              # (tid, n_preemptions) already sent
         self._n_cancelled = 0
         self._stranded = 0
+        # cross-shell handoffs (cluster migration): tid -> callback(task).
+        # When a registered task is next checkpoint-preempted, the loop
+        # resolves its local handle, skips the local requeue, and hands the
+        # task (context committed, handle settled) to the callback instead.
+        self._handoffs: dict = {}
+        self._handoffs_lock = threading.Lock()
+        self.migrated_out = 0
         self._running = False
         # serializes run_forever() startup against drain()/shutdown() so a
         # concurrent stop request cannot be erased mid-startup
@@ -178,6 +185,23 @@ class Scheduler:
         serving loop processes the task — submitting while no loop runs
         defers the work to the next ``run()``/``run_forever()``."""
         return self._submissions.submit(task)
+
+    def request_handoff(self, tid: int, callback) -> None:
+        """Register a cross-shell migration: the next time task ``tid`` is
+        checkpoint-preempted, the loop hands it to ``callback(task)``
+        (saved context committed, local handle resolved as migrated)
+        instead of requeueing it locally.  Thread-safe; ``callback`` runs
+        on the loop thread and must be cheap and non-blocking.  The caller
+        still has to trigger the preemption itself (and should
+        ``cancel_handoff`` on timeout)."""
+        with self._handoffs_lock:
+            self._handoffs[tid] = callback
+
+    def cancel_handoff(self, tid: int) -> bool:
+        """Withdraw a pending handoff; False if it already fired (the
+        callback owns the task) or none was registered."""
+        with self._handoffs_lock:
+            return self._handoffs.pop(tid, None) is not None
 
     def run(self, tasks_to_arrive: List[Task], quiet: bool = True) -> dict:
         """Paper batch mode (Algorithm 1): replay ``tasks_to_arrive``
@@ -230,6 +254,14 @@ class Scheduler:
             self._running = False
             self._loop_done.set()
         return self.last_report
+
+    @property
+    def serving(self) -> bool:
+        """True while a ``run``/``run_forever`` loop is live (its clock is
+        valid and submissions are being served).  Cleared when the loop
+        exits — including a crash — so cluster health checks can treat
+        ``not serving`` on a started node as node death."""
+        return self._serving.is_set()
 
     def wait_until_serving(self, timeout: Optional[float] = None) -> bool:
         """Block until a ``run_forever``/``run`` loop has started and its
@@ -332,7 +364,9 @@ class Scheduler:
                         del self._handles[tid]
 
     def _admit(self, task: Task, handle: Optional[TaskHandle], quiet: bool):
-        task.t_arrived = time.perf_counter()
+        if task.t_arrived is None:  # a migrated-in task keeps its original
+            task.t_arrived = time.perf_counter()  # arrival: turnaround is
+        # measured end-to-end across shells, not per hop
         if not self._placement_feasible(task, handle):
             return
         self._enqueue(task)
@@ -490,8 +524,21 @@ class Scheduler:
             self._preempt_pending.discard(ev.region_id)
             if self.shell.region(ev.region_id).dispatchable:
                 self._idle_hint.add(ev.region_id)
-            self._enqueue(ev.task, requeue=True)  # paper: enqueue the
-            if not quiet:                         # stopped task
+            with self._handoffs_lock:
+                handoff = self._handoffs.pop(ev.task.tid, None)
+            if handoff is not None:
+                # cross-shell migration: settle the local handle and give
+                # the checkpointed task to the cluster layer instead of
+                # requeueing it here
+                with self._handles_lock:
+                    handle = self._handles.pop(ev.task.tid, None)
+                if handle is not None:
+                    handle._migrate_out()
+                self.migrated_out += 1
+                handoff(ev.task)
+            else:
+                self._enqueue(ev.task, requeue=True)  # paper: enqueue the
+            if not quiet:                             # stopped task
                 print(f"[{self.now():7.3f}] preempt {ev.task} off R{ev.region_id}")
         elif ev.kind == EventKind.REGION_FAILED:
             region = self.shell.region(ev.region_id)
@@ -501,8 +548,13 @@ class Scheduler:
             if task is not None and task.status not in (TaskStatus.DONE,
                                                         TaskStatus.CANCELLED):
                 # elastic recovery: resume from the region bank's last
-                # committed context (survives the failure), else restart
+                # committed context (survives the failure), else restart.
+                # The commit must be THIS task's — a stale commit another
+                # task left in the bank would resume into the wrong state.
                 committed = region.bank.restore()
+                if committed is not None and committed.tid not in (
+                        None, task.tid):
+                    committed = None
                 task.saved_context = committed
                 task.n_migrations += 1
                 self._enqueue(task, requeue=True)
@@ -727,6 +779,7 @@ class Scheduler:
             "stranded_handles": self._stranded,
             "preemptions": sum(t.n_preemptions for t in tasks),
             "migrations": sum(t.n_migrations for t in tasks),
+            "migrated_out": self.migrated_out,
             "reconfigs": es.partial_loads,
             "full_reconfigs": es.full_reconfigs,
             "cache_hits": es.cache_hits,

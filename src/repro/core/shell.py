@@ -57,6 +57,7 @@ class Shell:
         self.regions: List[Region] = []     # active (non-retired) regions
         self._by_rid: Dict[int, Region] = {}  # every region ever created
         self._next_rid = 0
+        self._shutdown = False
 
         for devs in self.floorplanner.initial_plan(n_regions,
                                                    widths=region_widths):
@@ -115,8 +116,15 @@ class Shell:
         self.region(rid).request_preempt()
 
     def shutdown(self):
+        """Stop every background thread this shell owns: the prefetcher and
+        all region workers — including retired/failed regions, whose join
+        is a no-op.  Idempotent: cluster teardown and test ``finally``
+        blocks may both call it."""
+        if self._shutdown:
+            return
+        self._shutdown = True
         self.prefetcher.stop()
-        for r in self.regions:
+        for r in self._by_rid.values():
             r.shutdown()
 
     def alive_regions(self) -> List[Region]:

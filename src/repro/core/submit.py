@@ -28,6 +28,11 @@ class TaskFailedError(RuntimeError):
     """The task (or the scheduler serving it) failed permanently."""
 
 
+class MigratedError(RuntimeError):
+    """The task was handed off to another shell (cluster migration); this
+    local handle is finished, the cluster-level handle stays live."""
+
+
 class TaskHandle:
     """Future for one submitted task.
 
@@ -45,6 +50,7 @@ class TaskHandle:
         self._done = threading.Event()
         self._cancelled = False
         self._claimed = False
+        self._migrated = False
         self._exception: Optional[BaseException] = None
 
     # -- client side -----------------------------------------------------
@@ -57,6 +63,9 @@ class TaskHandle:
 
     def cancelled(self) -> bool:
         return self._cancelled
+
+    def migrated(self) -> bool:
+        return self._migrated
 
     def cancel(self) -> bool:
         with self._lock:
@@ -79,6 +88,10 @@ class TaskHandle:
                 f"(status={self.task.status.value})")
         if self._cancelled:
             raise CancelledError(f"task #{self.task.tid} was cancelled")
+        if self._migrated:
+            raise MigratedError(
+                f"task #{self.task.tid} migrated to another shell; wait on "
+                f"the cluster handle instead")
         if self._exception is not None:
             raise TaskFailedError(
                 f"task #{self.task.tid} failed") from self._exception
@@ -107,6 +120,18 @@ class TaskHandle:
 
     def _resolve(self):
         self._done.set()
+
+    def _migrate_out(self) -> bool:
+        """Scheduler side: the cluster frontend took this task for a
+        cross-shell migration.  The local handle resolves (neither
+        stranded nor cancelled); liveness continues on the cluster
+        handle."""
+        with self._lock:
+            if self._done.is_set():
+                return False
+            self._migrated = True
+            self._done.set()
+            return True
 
     def _fail(self, exc: BaseException):
         with self._lock:

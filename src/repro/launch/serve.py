@@ -30,6 +30,20 @@ benchmarks consume structured metrics instead of scraping stdout:
     PYTHONPATH=src python -m repro.launch.serve --mode scheduler \
         --open-loop --autoscale --max-regions 3 --burst 4 \
         --metrics-out metrics.json
+
+Cluster mode (DESIGN.md §7) — the same bursty open-loop trace served by
+``--shells N`` federated shells behind one ``ClusterFrontend``: a global
+router (``--router``) places each task, the load rebalancer (and
+``--force-migrations K``) checkpoint-migrates tasks between shells, and
+``--fail-shell I`` kills shell I mid-trace to exercise failover (its
+tasks re-admit from their last checkpoints; nothing is lost):
+
+    PYTHONPATH=src python -m repro.launch.serve --mode cluster \
+        --shells 2 --n-tasks 12 --burst 4 --force-migrations 2 \
+        --fail-shell 1 --seed 7 --metrics-out cluster.json
+
+All serving modes accept ``--seed`` so task streams, arrival gaps and
+image payloads replay identically across runs.
 """
 from __future__ import annotations
 
@@ -232,9 +246,116 @@ def serve_task_stream(*, n_tasks: int = 16, n_regions: int = 2,
     return rep
 
 
+def serve_cluster(*, n_shells: int = 2, regions_per_shell: int = 1,
+                  n_tasks: int = 12, size: int = 48, seed: int = 0,
+                  router: str = "least-loaded", policy: str = "fcfs",
+                  arrival_rate: float = 4.0, burst: int = 4,
+                  rebalance: bool = True, force_migrations: int = 0,
+                  fail_shell: int = None, fail_after: int = None,
+                  prefetch: bool = True, metrics_out: str = None,
+                  quiet: bool = False) -> dict:
+    """Serve a bursty open-loop blur stream through a multi-shell cluster
+    (DESIGN.md §7) and return the aggregated ``ClusterFrontend.report()``.
+
+    ``force_migrations`` checkpoint-migrates that many *running* tasks off
+    the busiest shell mid-trace (deterministic exercise of the migration
+    path on top of the opportunistic rebalancer).  ``fail_shell`` injects
+    a whole-node failure on that shell once ``fail_after`` tasks have been
+    submitted (default: half the trace) — its outstanding tasks re-admit
+    on the survivors from their last checkpoints.
+    """
+    import json
+
+    from repro.cluster import ClusterFrontend
+    from repro.controller.kernels import get_kernel
+    from repro.core.scheduler import SchedulerConfig
+    from repro.core.task import Task
+    from repro.kernels.blur.tasks import make_image
+
+    rng = np.random.default_rng(seed)
+    kernels = ["MedianBlur", "GaussianBlur"]
+
+    def make_task(i):
+        k = kernels[i % len(kernels)]
+        img = make_image(rng, size)
+        kd = get_kernel(k)
+        return Task(kernel=k,
+                    args=kd.bundle(img, np.zeros_like(img), H=size, W=size,
+                                   iters=2),
+                    priority=int(rng.integers(5)))
+
+    tasks = [make_task(i) for i in range(n_tasks)]
+    fe = ClusterFrontend(n_shells=n_shells,
+                         regions_per_shell=regions_per_shell,
+                         router=router, rebalance=rebalance,
+                         config=SchedulerConfig(policy=policy),
+                         chunk_budget=2, prefetch=prefetch)
+    for node in fe.nodes:
+        # deterministic per-chunk work (see serve_task_stream) + warm
+        # bitstreams so the trace measures the fabric, not XLA compiles
+        node.shell.region_slowdown_s = 0.02
+        for r in node.shell.regions:
+            r.slowdown_s = 0.02
+        for kname in kernels:
+            ex = next(t for t in tasks if t.kernel == kname)
+            for geom in node.shell.geometries():
+                node.shell.engine.prewarm(kname, ex.args, geom)
+
+    if fail_after is None:
+        fail_after = n_tasks // 2
+    burst_n = max(1, burst)
+    forced_done = 0
+    handles = []
+    for i, t in enumerate(tasks):
+        handles.append(fe.submit(t))
+        if fail_shell is not None and (i + 1) == fail_after:
+            if not quiet:
+                print(f"[cluster] injecting failure on shell {fail_shell}")
+            fe.nodes[fail_shell].inject_failure()
+        if force_migrations and forced_done < force_migrations and i >= 1:
+            if fe.migrate(prefer="running"):
+                forced_done += 1
+        if (i + 1) % burst_n == 0 and (i + 1) < n_tasks:
+            time.sleep(float(rng.exponential(1.0 / max(arrival_rate, 1e-6))))
+    # anything still short of the forced-migration quota: keep trying
+    # while work is in flight (the stream may have outrun the bursts)
+    while forced_done < force_migrations and any(not h.done()
+                                                 for h in handles):
+        if fe.migrate(prefer="any"):
+            forced_done += 1
+        else:
+            time.sleep(0.01)
+    for h in handles:
+        h.wait(timeout=180.0)
+    rep = fe.shutdown()
+    if metrics_out:
+        with open(metrics_out, "w") as f:
+            json.dump(rep, f, indent=2, default=str)
+        if not quiet:
+            print(f"[cluster] metrics written to {metrics_out}")
+    if not quiet:
+        print(f"[cluster] {rep['n_shells']} shells, router="
+              f"{rep['router']}: {rep['n_done']}/{n_tasks} tasks in "
+              f"{rep['wall_s']:.2f}s ({rep['throughput_tps']:.1f} tasks/s)")
+        print(f"[cluster] turnaround p50 {rep['turnaround_p50_s']:.2f}s / "
+              f"p99 {rep['turnaround_p99_s']:.2f}s; "
+              f"{rep['migrations_completed']}/{rep['migrations_attempted']} "
+              f"migrations, {rep['failovers']} failovers, "
+              f"{rep['lost_tasks']} lost, "
+              f"{rep['stranded_handles']} stranded handles")
+        for nid, s in rep["per_shell"].items():
+            print(f"[cluster]   shell {nid}: {s['n_done']} done, "
+                  f"util {s['utilization']:.0%}, "
+                  f"{s['migrated_out']} migrated out, "
+                  f"healthy={s['healthy']}"
+                  + (f" (crash: {s['crash']})" if s["crash"] else ""))
+    return rep
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=("lm", "scheduler"), default="lm")
+    ap.add_argument("--mode", choices=("lm", "scheduler", "cluster"),
+                    default="lm")
     ap.add_argument("--arch", default="qwen3-8b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
@@ -242,6 +363,9 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--n-tasks", type=int, default=16)
     ap.add_argument("--regions", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="RNG seed for task streams, arrival gaps and "
+                         "payloads (reproducible smokes/benchmarks)")
     ap.add_argument("--policy", choices=("fcfs", "edf", "wfq"),
                     default="fcfs")
     ap.add_argument("--open-loop", action="store_true",
@@ -264,9 +388,41 @@ def main():
                          "drain/shutdown")
     ap.add_argument("--no-prefetch", action="store_true")
     ap.add_argument("--cache-capacity", type=int, default=None)
+    # cluster mode (DESIGN.md §7)
+    ap.add_argument("--shells", type=int, default=2,
+                    help="cluster: number of shell nodes")
+    ap.add_argument("--router", choices=("least-loaded",
+                                         "bitstream-affinity",
+                                         "power-aware"),
+                    default="least-loaded")
+    ap.add_argument("--no-rebalance", action="store_true",
+                    help="cluster: disable the automatic load rebalancer")
+    ap.add_argument("--force-migrations", type=int, default=0,
+                    help="cluster: checkpoint-migrate this many running "
+                         "tasks off the busiest shell mid-trace")
+    ap.add_argument("--fail-shell", type=int, default=None,
+                    help="cluster: inject a whole-node failure on this "
+                         "shell mid-trace (failover exercise)")
+    ap.add_argument("--fail-after", type=int, default=None,
+                    help="cluster: submit count after which --fail-shell "
+                         "fires (default: half the trace)")
     args = ap.parse_args()
+    if args.mode == "cluster":
+        serve_cluster(n_shells=args.shells,
+                      regions_per_shell=args.regions // args.shells or 1,
+                      n_tasks=args.n_tasks, seed=args.seed,
+                      router=args.router, policy=args.policy,
+                      arrival_rate=args.arrival_rate, burst=args.burst,
+                      rebalance=not args.no_rebalance,
+                      force_migrations=args.force_migrations,
+                      fail_shell=args.fail_shell,
+                      fail_after=args.fail_after,
+                      prefetch=not args.no_prefetch,
+                      metrics_out=args.metrics_out)
+        return
     if args.mode == "scheduler":
         serve_task_stream(n_tasks=args.n_tasks, n_regions=args.regions,
+                          seed=args.seed,
                           prefetch=not args.no_prefetch,
                           policy=args.policy, open_loop=args.open_loop,
                           arrival_rate=args.arrival_rate,
@@ -280,7 +436,8 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    serve(cfg, batch=args.batch, prompt_len=args.prompt_len, gen=args.gen)
+    serve(cfg, batch=args.batch, prompt_len=args.prompt_len, gen=args.gen,
+          seed=args.seed)
 
 
 if __name__ == "__main__":

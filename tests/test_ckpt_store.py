@@ -1,0 +1,159 @@
+"""Checkpoint store integrity: sidecar leaf-count validation, per-leaf
+CRC32 checksums, corrupt-file rejection, and the double-buffered fallback.
+Cross-shell migration (repro/cluster) trusts these files verbatim, so a
+corrupt checkpoint must fail the load loudly rather than resume wrong."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+try:  # property tests degrade to deterministic variants without the dep
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal containers
+    HAVE_HYPOTHESIS = False
+
+from repro.ckpt.store import (CheckpointCorruptError,
+                              DoubleBufferedCheckpointer, load_pytree,
+                              save_pytree)
+
+
+def _tree(rng, n_leaves=3):
+    return {"a": [rng.standard_normal((4, 5)).astype(np.float32)
+                  for _ in range(n_leaves)],
+            "b": rng.integers(0, 100, size=(7,), dtype=np.int32)}
+
+
+def _assert_trees_equal(got, want):
+    import jax
+
+    for g, w in zip(jax.tree.flatten(got)[0], jax.tree.flatten(want)[0]):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_roundtrip_bit_identical(tmp_path, rng):
+    tree = _tree(rng)
+    path = str(tmp_path / "ckpt.npz")
+    save_pytree(path, tree, meta={"step": 3})
+    loaded = load_pytree(path, tree)
+    _assert_trees_equal(loaded, tree)
+    with open(path + ".json") as f:
+        sc = json.load(f)
+    assert sc["n_leaves"] == 4 and len(sc["checksums"]) == 4
+    assert sc["meta"] == {"step": 3}
+
+
+def test_corrupt_array_file_raises(tmp_path, rng):
+    tree = _tree(rng)
+    path = str(tmp_path / "ckpt.npz")
+    save_pytree(path, tree)
+    blob = bytearray(open(path, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF  # flip a payload byte
+    with open(path, "wb") as f:
+        f.write(blob)
+    with pytest.raises(CheckpointCorruptError):
+        load_pytree(path, tree)
+
+
+def test_truncated_file_raises(tmp_path, rng):
+    tree = _tree(rng)
+    path = str(tmp_path / "ckpt.npz")
+    save_pytree(path, tree)
+    blob = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(blob[: len(blob) // 3])
+    with pytest.raises(CheckpointCorruptError):
+        load_pytree(path, tree)
+
+
+def test_sidecar_leaf_count_mismatch_raises(tmp_path, rng):
+    tree = _tree(rng)
+    path = str(tmp_path / "ckpt.npz")
+    save_pytree(path, tree)
+    with open(path + ".json") as f:
+        sc = json.load(f)
+    sc["n_leaves"] = 99
+    with open(path + ".json", "w") as f:
+        json.dump(sc, f)
+    with pytest.raises(CheckpointCorruptError, match="sidecar recorded 99"):
+        load_pytree(path, tree)
+
+
+def test_checksum_mismatch_raises_and_unverified_load_passes(tmp_path, rng):
+    tree = _tree(rng)
+    path = str(tmp_path / "ckpt.npz")
+    save_pytree(path, tree)
+    with open(path + ".json") as f:
+        sc = json.load(f)
+    sc["checksums"][1] = "deadbeef"
+    with open(path + ".json", "w") as f:
+        json.dump(sc, f)
+    with pytest.raises(CheckpointCorruptError, match="leaf_1 checksum"):
+        load_pytree(path, tree)
+    # verify=False and sidecar-less (legacy) loads still work structurally
+    loaded = load_pytree(path, tree, verify=False)
+    _assert_trees_equal(loaded, tree)
+    os.remove(path + ".json")
+    _assert_trees_equal(load_pytree(path, tree), tree)
+
+
+def test_like_structure_mismatch_still_valueerror(tmp_path, rng):
+    tree = _tree(rng)
+    path = str(tmp_path / "ckpt.npz")
+    save_pytree(path, tree)
+    with pytest.raises(ValueError, match="expected 2"):
+        load_pytree(path, {"a": [tree["a"][0]], "b": tree["b"]})
+
+
+def test_double_buffer_falls_back_to_older_valid_commit(tmp_path, rng):
+    db = DoubleBufferedCheckpointer(str(tmp_path / "db"))
+    t1 = _tree(rng)
+    t2 = _tree(rng)
+    p1 = db.save(t1, meta={"step": 1})
+    p2 = db.save(t2, meta={"step": 2})
+    assert p1 != p2
+    got, meta = db.restore(t1)
+    _assert_trees_equal(got, t2)
+    assert meta == {"step": 2}
+    # corrupt the newest buffer: restore must fall back to the older one
+    blob = bytearray(open(p2, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF
+    with open(p2, "wb") as f:
+        f.write(blob)
+    got, meta = db.restore(t1)
+    _assert_trees_equal(got, t1)
+    assert meta == {"step": 1}
+    # both corrupt -> no valid commit, not an exception
+    blob = bytearray(open(p1, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF
+    with open(p1, "wb") as f:
+        f.write(blob)
+    assert db.restore(t1) == (None, None)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None,
+              suppress_health_check=[HealthCheck.function_scoped_fixture])
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 6))
+    def test_roundtrip_property(tmp_path, seed, n):
+        rng = np.random.default_rng(seed)
+        tree = {"x": [rng.standard_normal((n, 3)).astype(np.float32)
+                      for _ in range(n)],
+                "i": rng.integers(-5, 5, size=(n,), dtype=np.int32)}
+        path = str(tmp_path / f"p{seed}.npz")
+        save_pytree(path, tree)
+        _assert_trees_equal(load_pytree(path, tree), tree)
+
+else:  # deterministic fallback
+
+    def test_roundtrip_property(tmp_path, rng):
+        for n in (1, 4):
+            tree = {"x": [rng.standard_normal((n, 3)).astype(np.float32)
+                          for _ in range(n)],
+                    "i": rng.integers(-5, 5, size=(n,), dtype=np.int32)}
+            path = str(tmp_path / f"p{n}.npz")
+            save_pytree(path, tree)
+            _assert_trees_equal(load_pytree(path, tree), tree)
