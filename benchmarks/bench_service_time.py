@@ -113,7 +113,8 @@ def measure_policies(printer=print, cache_path: str = "bench_policies.json",
         keep = ("cfg", "policy", "n_done", "wall_s", "throughput_tps",
                 "turnaround_p50_s", "turnaround_p99_s", "deadline_tasks",
                 "deadline_misses", "per_tenant", "fairness_ratio",
-                "preemptions")
+                "preemptions", "reconfigs", "coalesced_dispatches",
+                "stranded_handles")
         results = [{k: r[k] for k in keep} for r in results]
         with open(cache_path, "w") as f:
             json.dump(results, f)
@@ -126,7 +127,9 @@ def measure_policies(printer=print, cache_path: str = "bench_policies.json",
                 f"deadline_miss={r['deadline_misses']}/"
                 f"{r['deadline_tasks']};"
                 f"fairness={r['fairness_ratio']:.2f};"
-                f"n_done={r['n_done']};preempt={r['preemptions']}")
+                f"n_done={r['n_done']};preempt={r['preemptions']};"
+                f"reconfigs={r.get('reconfigs')};"
+                f"coalesced={r.get('coalesced_dispatches')}")
     return results
 
 
@@ -139,9 +142,11 @@ def run_elastic_cell(arm: str, *, n_bursts: int = 3, burst: int = 6,
     goes idle for ``gap_s`` — repeated ``n_bursts`` times.
 
     ``arm`` is ``static1`` / ``static2`` (fixed shells, the paper's two
-    builds) or ``elastic`` (1 region + autoscaler bounded at
-    ``max_regions``).  Returns the scheduler report with the run config
-    and region-seconds attached.
+    builds), ``static2-nc`` (static2 with same-bitstream coalescing
+    disabled — the reconfig-count control arm, DESIGN.md §8.3) or
+    ``elastic`` (1 region + autoscaler bounded at ``max_regions``).
+    Returns the scheduler report with the run config and region-seconds
+    attached.
     """
     import threading
     import time as _time
@@ -157,13 +162,17 @@ def run_elastic_cell(arm: str, *, n_bursts: int = 3, burst: int = 6,
     kernels = ["MedianBlur", "GaussianBlur"]
 
     def make_task(i):
+        # kernels alternate within a burst (the executable-churn worst
+        # case); serving bursts carry one priority class, so the reconfig
+        # pressure is real FIFO alternation — exactly what same-bitstream
+        # coalescing (DESIGN.md §8.3) exists to absorb
         k = kernels[i % len(kernels)]
         img = make_image(rng, size)
         kd = get_kernel(k)
         return Task(kernel=k,
                     args=kd.bundle(img, np.zeros_like(img), H=size, W=size,
                                    iters=1),
-                    priority=int(rng.integers(5)))
+                    priority=2)
 
     tasks = [make_task(i) for i in range(n_bursts * burst)]
 
@@ -174,7 +183,8 @@ def run_elastic_cell(arm: str, *, n_bursts: int = 3, burst: int = 6,
             min_regions=1, max_regions=max_regions,
             grow_queue_depth=1.5, cooldown_s=0.25, idle_grace_s=0.3)))
     else:
-        shell = Shell(n_regions={"static1": 1, "static2": 2}[arm],
+        shell = Shell(n_regions={"static1": 1, "static2": 2,
+                                 "static2-nc": 2}[arm],
                       chunk_budget=2)
     for kname in kernels:
         shell.engine.prewarm(kname, tasks[0].args, shell.regions[0].geometry)
@@ -182,7 +192,9 @@ def run_elastic_cell(arm: str, *, n_bursts: int = 3, burst: int = 6,
     for r in shell.regions:             # deterministic per-chunk cost
         r.slowdown_s = slowdown
 
-    sched = Scheduler(shell, SchedulerConfig(), pool=pool)
+    sched = Scheduler(shell,
+                      SchedulerConfig(coalescing=(arm != "static2-nc")),
+                      pool=pool)
     server = threading.Thread(target=sched.run_forever, daemon=True)
     server.start()
     sched.wait_until_serving(timeout=10.0)
@@ -343,15 +355,16 @@ def measure_elastic(printer=print, cache_path: str = "bench_elastic.json",
             results = json.load(f)
     else:
         results = [run_elastic_cell(a, **cell_kwargs)
-                   for a in ("static1", "static2", "elastic")]
+                   for a in ("static1", "static2", "static2-nc", "elastic")]
         keep = ("cfg", "n_done", "wall_s", "throughput_tps",
                 "turnaround_p50_s", "turnaround_p99_s", "preemptions",
-                "region_seconds", "pool")
+                "region_seconds", "pool", "reconfigs",
+                "coalesced_dispatches", "stranded_handles")
         results = [{k: r[k] for k in keep} for r in results]
         with open(cache_path, "w") as f:
             json.dump(results, f)
-    printer("# elastic arm: static-1RR vs static-2RR vs autoscaled pool "
-            "on a bursty trace (name,us_per_call,derived)")
+    printer("# elastic arm: static-1RR vs static-2RR (+/- coalescing) vs "
+            "autoscaled pool on a bursty trace (name,us_per_call,derived)")
     for r in results:
         p = r["pool"]
         printer(f"elastic/{r['cfg']['arm']}_turnaround,"
@@ -360,8 +373,25 @@ def measure_elastic(printer=print, cache_path: str = "bench_elastic.json",
                 f"region_s={r['region_seconds']:.2f};"
                 f"resizes={p.get('resizes', 0)};"
                 f"util={p.get('utilization', 0.0):.2f};"
+                f"reconfigs={r.get('reconfigs')};"
+                f"coalesced={r.get('coalesced_dispatches')};"
+                f"stranded={r.get('stranded_handles')};"
                 f"n_done={r['n_done']}")
     by_arm = {r["cfg"]["arm"]: r for r in results}
+    if "static2" in by_arm and "static2-nc" in by_arm:
+        co, nc = by_arm["static2"], by_arm["static2-nc"]
+        printer(f"elastic/coalescing_headline,{co.get('reconfigs', 0)},"
+                f"reconfigs_without={nc.get('reconfigs', 0)};"
+                f"coalesced={co.get('coalesced_dispatches', 0)};"
+                f"stranded={co.get('stranded_handles', 0)}")
+        # the §8.3 acceptance gate: coalescing must measurably cut the
+        # reconfiguration count on the same bursty trace, strand nothing,
+        # and lose no work
+        assert co.get("stranded_handles", 0) == 0, co
+        assert co["n_done"] == nc["n_done"], (co, nc)
+        assert co.get("reconfigs", 0) < nc.get("reconfigs", 0), (
+            f"coalescing did not reduce reconfigs: "
+            f"{co.get('reconfigs')} vs {nc.get('reconfigs')}")
     if "static2" in by_arm and "elastic" in by_arm:
         s2, el = by_arm["static2"], by_arm["elastic"]
         ratio = (el["turnaround_p99_s"] /

@@ -40,6 +40,13 @@ def main() -> None:
     from benchmarks.harness import full_sweep
     import os
 
+    # chunk-pipeline microbench (sync vs pipelined per-chunk dispatch
+    # overhead + bit-identity gate); same fast-mode caching contract
+    if args.fast and not os.path.exists("bench_chunk_pipeline.json"):
+        print("chunk_pipeline/skipped,0,fast-mode")
+    else:
+        bench_overhead.measure_chunk_pipeline(use_cache=not args.no_cache)
+
     # scheduling-policy arm (fcfs vs edf vs wfq on one stream); like the
     # sweep, fast mode only reports it when already cached
     if args.fast and not os.path.exists("bench_policies.json"):

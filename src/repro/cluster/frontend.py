@@ -541,10 +541,16 @@ class ClusterFrontend:
         """Serialize the task's committed context + partial outputs through
         the checkpoint store and read it back verified — the migrated
         resume consumes only bytes that survived the checksummed disk
-        round trip (what a real fabric ships between hosts)."""
+        round trip (what a real fabric ships between hosts).
+
+        Preemption commits are device-resident (lazy spill, DESIGN.md §8.2);
+        this is the point where the committed host copy is actually
+        produced — ``materialize()`` pays the device→host transfer exactly
+        once, here, instead of on every preemption."""
         committed = task.saved_context
         if committed is None:
             return None
+        committed = committed.materialize()
         like = {"context": committed.context, "payload": committed.payload}
         path = os.path.join(
             self.spill_dir,

@@ -13,13 +13,28 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import List, Optional
+from typing import Dict, List
 
-from repro.controller.abi import ArgBundle
 from repro.controller.kernels import get_kernel
 from repro.core.scheduler import Scheduler, SchedulerConfig
 from repro.core.shell import Shell
-from repro.core.task import Task, TaskStatus
+from repro.core.submit import TaskHandle
+from repro.core.task import Task
+
+
+class _HandleRegistry(dict):
+    """tid -> TaskHandle map whose insertions wake waiters: ``wait()``
+    callers racing ``run()`` block on the condition until their task's
+    handle is registered, instead of polling (or missing it)."""
+
+    def __init__(self, cv: threading.Condition):
+        super().__init__()
+        self._cv = cv
+
+    def __setitem__(self, key, value):
+        with self._cv:
+            super().__setitem__(key, value)
+            self._cv.notify_all()
 
 
 class Controller:
@@ -27,6 +42,10 @@ class Controller:
         self.shell = shell
         self.scheduler = Scheduler(shell, scheduler_config)
         self._submitted: List[Task] = []
+        # tid -> TaskHandle for everything ever run through this controller
+        # (the event-driven wait() target; no status polling anywhere)
+        self._cv = threading.Condition()
+        self._handles: Dict[int, TaskHandle] = _HandleRegistry(self._cv)
 
     def launch(self, kernel: str, hittiles=(), priority: int = 4,
                arrival_time: float = 0.0, **scalars) -> Task:
@@ -43,14 +62,25 @@ class Controller:
     def run(self, quiet: bool = True) -> dict:
         """Run the scheduler over everything submitted so far."""
         tasks, self._submitted = self._submitted, []
-        return self.scheduler.run(tasks, quiet=quiet)
+        return self.scheduler.run(tasks, quiet=quiet,
+                                  handles=self._handles)
 
     def wait(self, task: Task, timeout: float = 60.0) -> Task:
-        t0 = time.perf_counter()
-        while task.status not in (TaskStatus.DONE, TaskStatus.FAILED):
-            if time.perf_counter() - t0 > timeout:
+        """Block until ``task`` settles — event-driven on the task's
+        ``TaskHandle`` (a ``threading.Event`` under the hood), no polling
+        loop.  Usable from any thread, including while — or just before —
+        ``run()`` is blocking in another one: a wait racing ``run()``
+        blocks on the handle registration first, then on completion.
+        ``TimeoutError`` if the task has not settled (or was never run)
+        within ``timeout``."""
+        deadline = time.perf_counter() + timeout
+        with self._cv:
+            if not self._cv.wait_for(lambda: task.tid in self._handles,
+                                     timeout=timeout):
                 raise TimeoutError(task)
-            time.sleep(0.005)
+            handle = self._handles[task.tid]
+        if not handle.wait(max(0.0, deadline - time.perf_counter())):
+            raise TimeoutError(task)
         return task
 
     def shutdown(self):

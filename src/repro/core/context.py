@@ -108,13 +108,57 @@ class ContextRecord:
 
 @dataclass
 class Committed:
-    """One committed (host-side) context snapshot."""
+    """One committed context snapshot.
+
+    Two residencies (DESIGN.md §8):
+
+    - ``device=False`` (the seed behaviour): ``context``/``payload`` leaves
+      are host numpy copies, ready for disk spill or cross-shell shipping.
+    - ``device=True`` (lazy spill): the leaves are still device-resident
+      ``jax.Array``s committed by the region worker without any host round
+      trip.  ``region_rid`` records which region produced them; a resume on
+      the *same* region consumes them directly (no host copy at all), while
+      migration / checkpointing / cross-region resume calls
+      ``materialize()`` to produce the committed host copy on demand.
+    """
     seqno: int
-    context: Any          # ContextRecord (host numpy copies)
+    context: Any          # ContextRecord (numpy, or jax.Array when device)
     payload: Any          # kernel state pytree (e.g. partial output buffers)
     # which task committed this snapshot: failover recovery must never
     # resume task X from a stale commit task Y left in the same bank
     tid: Optional[int] = None
+    device: bool = False           # leaves still live in device memory
+    region_rid: Optional[int] = None  # region whose HBM holds them
+    # identity of the owning Region *object* — rids restart at 0 on every
+    # shell, so the same-region fast path must compare identity, never the
+    # number (a failover commit from another shell's region 0 has to take
+    # the materializing path, exactly like any other cross-region resume)
+    owner: Any = None
+    _host: Optional["Committed"] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _mat_lock: Any = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
+
+    def materialize(self) -> "Committed":
+        """The committed *host* copy, produced on demand (and cached).
+
+        A host-resident commit returns itself; a device-resident one pays
+        the device→host transfer exactly once — this is the actual spill,
+        deferred from preemption time to the first consumer that really
+        needs host bytes (disk checkpoint, cross-shell migration, or a
+        resume on a different region)."""
+        if not self.device:
+            return self
+        with self._mat_lock:
+            if self._host is None:
+                host_ctx = jax.tree.map(
+                    lambda x: jax.device_get(x), self.context)
+                host_payload = (jax.tree.map(
+                    lambda x: jax.device_get(x), self.payload)
+                    if self.payload is not None else None)
+                self._host = Committed(self.seqno, host_ctx, host_payload,
+                                       tid=self.tid)
+            return self._host
 
 
 class ContextBank:
@@ -134,16 +178,27 @@ class ContextBank:
         self._lock = threading.Lock()
         self.interrupt_next_commit = False  # test hook
 
-    def commit(self, context, payload=None, tid=None) -> int:
+    def commit(self, context, payload=None, tid=None, *,
+               device: bool = False, region_rid=None, owner=None) -> int:
+        """Commit a snapshot.  ``device=True`` is the lazy-spill path: the
+        jax arrays are stored as-is (no device→host copy on the preemption
+        hot path) and the host copy is produced on demand by
+        ``Committed.materialize()``."""
         with self._lock:
             self._seq += 1
             target = (self._active + 1) % 2
-            # device -> host materialization (the BRAM -> CPU copy)
-            host_ctx = jax.tree.map(lambda x: jax.device_get(x), context)
-            host_payload = (jax.tree.map(lambda x: x, payload)
-                            if payload is not None else None)
-            self._buffers[target] = Committed(self._seq, host_ctx,
-                                              host_payload, tid=tid)
+            if device:
+                committed = Committed(self._seq, context, payload, tid=tid,
+                                      device=True, region_rid=region_rid,
+                                      owner=owner)
+            else:
+                # eager device -> host materialization (the BRAM -> CPU copy)
+                host_ctx = jax.tree.map(lambda x: jax.device_get(x), context)
+                host_payload = (jax.tree.map(lambda x: x, payload)
+                                if payload is not None else None)
+                committed = Committed(self._seq, host_ctx, host_payload,
+                                      tid=tid)
+            self._buffers[target] = committed
             if self.interrupt_next_commit:
                 # simulate the asynchronous reset landing mid-save: the
                 # active index is NOT flipped -> previous commit stays valid

@@ -109,6 +109,15 @@ class _FifoQueue:
             self._compact()
         return t
 
+    def remove(self, task: Task) -> bool:
+        """Remove a specific task (identity comparison — Task's generated
+        ``==`` would compare numpy payloads); order is preserved."""
+        for i in range(self._head, len(self._items)):
+            if self._items[i] is task:
+                del self._items[i]
+                return True
+        return False
+
     def iter_live(self):
         """Lazy iteration over non-cancelled tasks (prefetch peeks stop
         after k tasks without materialising the queue)."""
@@ -154,6 +163,27 @@ class SchedulingPolicy:
 
     def peek_for_prefetch(self, k: int) -> List[Task]:
         raise NotImplementedError
+
+    def peek_same_bitstream(self, matches, region,
+                            window: int) -> Optional[Task]:
+        """Same-bitstream coalescing lookahead (DESIGN.md §8.3): a queued
+        task for which ``matches(task)`` is true (same executable key as
+        the region's loaded bitstream) and which fits ``region``, reachable
+        within ``window`` queue positions *without bending the policy's
+        cross-class semantics* — strict priority order for fcfs, deadline
+        order for edf, tenant fairness for wfq.  Only the order *within*
+        one equivalence class (level / background set / tenant FIFO) may be
+        bent, bounded by ``window`` — the serving analogue of continuous
+        batching.  Must not mutate the queues; the scheduler removes the
+        returned task with ``take``.  Default: no coalescing."""
+        return None
+
+    def take(self, task: Task) -> bool:
+        """Remove a specific queued task (returned by
+        ``peek_same_bitstream``) from the policy's queues, applying the
+        same accounting ``select`` would (e.g. wfq virtual-time charge).
+        False if the task is no longer queued."""
+        return False
 
     def on_requeue(self, task: Task) -> None:
         self.enqueue(task)
@@ -234,6 +264,30 @@ class FcfsPriority(SchedulingPolicy):
                     return out
         return out
 
+    def peek_same_bitstream(self, matches, region, window):
+        # strict priority is never bent: scan levels top-down and stop at
+        # the first level owning a task that fits this region.  Within that
+        # level, a same-bitstream task up to ``window`` positions deep may
+        # jump the (same-priority) FIFO — the continuous-batching move.  A
+        # level whose window holds no region-fitting task is skipped, the
+        # same placement rule ``select`` applies to blocked heads.
+        for q in self._queues:
+            fitting_seen = False
+            for i, t in enumerate(q.iter_live()):
+                if i >= window:
+                    break
+                if not region_fits(t, region):
+                    continue
+                if matches(t):
+                    return t
+                fitting_seen = True
+            if fitting_seen:
+                return None  # this level's head must dispatch normally
+        return None
+
+    def take(self, task):
+        return self._queues[task.priority].remove(task)
+
     def pending_tasks(self):
         return [t for q in self._queues for t in q.live()]
 
@@ -291,12 +345,18 @@ class EarliestDeadlineFirst(SchedulingPolicy):
                 best_i = i
         if best_i is None:
             return None
-        entry = self._heap[best_i]
-        self._heap[best_i] = self._heap[-1]
-        self._heap.pop()
-        if best_i < len(self._heap):
-            heapq.heapify(self._heap)
+        entry = self._remove_at(best_i)
         return entry[3], pick_region(entry[3], idle_regions, self.affinity)
+
+    def _remove_at(self, i: int):
+        """Swap-and-pop removal of heap entry ``i`` (re-heapify if the
+        moved tail landed mid-heap)."""
+        entry = self._heap[i]
+        self._heap[i] = self._heap[-1]
+        self._heap.pop()
+        if i < len(self._heap):
+            heapq.heapify(self._heap)
+        return entry
 
     def choose_victim(self, candidate, running):
         # qualification is on the deadline ALONE and strict — equal
@@ -325,6 +385,32 @@ class EarliestDeadlineFirst(SchedulingPolicy):
         live = (e for e in self._heap
                 if e[3].status is not TaskStatus.CANCELLED)
         return [e[3] for e in heapq.nsmallest(k, live)]
+
+    def peek_same_bitstream(self, matches, region, window):
+        # deadline order is never bent: a match qualifies only when every
+        # region-fitting task ahead of it (earlier deadline) is background
+        # (``deadline_s is None`` sorts to +inf, so in practice only
+        # background tasks can be jumped by other background tasks — a
+        # deadline-bearing task is never skipped for a coalescing win).
+        live = (e for e in self._heap
+                if e[3].status is not TaskStatus.CANCELLED)
+        ahead_has_deadline = False
+        for e in heapq.nsmallest(window, live):
+            t = e[3]
+            if not region_fits(t, region):
+                continue
+            if matches(t):
+                return None if ahead_has_deadline else t
+            if t.deadline_s is not None:
+                ahead_has_deadline = True
+        return None
+
+    def take(self, task):
+        for i, e in enumerate(self._heap):
+            if e[3] is task:
+                self._remove_at(i)
+                return True
+        return False
 
     def pending_tasks(self):
         return [e[3] for e in self._heap
@@ -444,6 +530,42 @@ class WeightedFairShare(SchedulingPolicy):
             if not progressed:
                 break
         return out
+
+    def peek_same_bitstream(self, matches, region, window):
+        # tenant fairness is never bent: only the tenant whose turn it is
+        # (minimum virtual time — exactly who ``select`` would serve) may
+        # coalesce, and ``take`` charges its virtual clock like any other
+        # dispatch.  Only that tenant's own FIFO is bent, window-bounded.
+        backlogged = self._backlogged()
+        if not backlogged:
+            return None
+        tenant = min(backlogged, key=lambda t: (self._vt.get(t, 0.0), t))
+        n = 0
+        for t in self._queues[tenant]:
+            if t.status is TaskStatus.CANCELLED:
+                continue
+            if n >= window:
+                break
+            n += 1
+            if region_fits(t, region) and matches(t):
+                return t
+        return None
+
+    def take(self, task):
+        q = self._queues.get(task.tenant)
+        if q is None:
+            return False
+        for i, t in enumerate(q):
+            if t is task:
+                del q[i]
+                break
+        else:
+            return False
+        start = self._vt.get(task.tenant, 0.0)
+        self._vclock = max(self._vclock, start)
+        self._vt[task.tenant] = start + self.quantum / self._weight(
+            task.tenant)
+        return True
 
     def pending_tasks(self):
         return [t for q in self._queues.values() for t in q

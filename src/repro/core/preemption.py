@@ -84,6 +84,41 @@ def make_chunk_fn(kernel_fn: Callable):
     return chunk
 
 
+def make_pipelined_chunk(kernel_fn: Callable):
+    """The pipelined chunk entry point (DESIGN.md §8):
+
+        chunk(ctx, state, ints, floats, budget) -> (ctx, state, done)
+
+    Three deltas against ``make_chunk_fn``, all in service of issuing chunk
+    *k+1* before chunk *k*'s ``done`` flag has resolved on the host:
+
+    - **done-gated identity** — on a finished context the chunk is an exact
+      pass-through.  This is the speculative-discard rule: the one chunk
+      the worker issues beyond completion computes nothing and its outputs
+      are bit-identical to the final state, so speculation can never change
+      results.
+    - **budget reset inside the executable** — ``ctx.with_budget`` moves
+      from a per-chunk eager host op into the traced program; ``budget`` is
+      a *non-donated* scalar argument the worker uploads once per launch.
+    - **independent done snapshot** — the third output is a fresh buffer
+      (``optimization_barrier`` keeps XLA from aliasing it to the context's
+      own ``done``), so the worker can poll/read chunk *k*'s flag after
+      chunk *k*'s context has already been donated into chunk *k+1*.
+    """
+    def chunk(ctx: ContextRecord, state, ints, floats, budget):
+        def run(c, s):
+            return kernel_fn(c.with_budget(budget), s, ints, floats)
+
+        def skip(c, s):
+            return c, s
+
+        ctx, state = jax.lax.cond(ctx.done == 0, run, skip, ctx, state)
+        done = jax.lax.optimization_barrier(ctx.done)
+        return ctx, state, done
+
+    return chunk
+
+
 def run_to_completion(chunk_fn, ctx, state, ints, floats, budget: int,
                       max_chunks: int = 100000):
     """Host loop for tests: run chunks until done (no scheduler)."""

@@ -284,10 +284,20 @@ class ReconfigEngine:
                 break
 
     def _compile(self, kd: KernelDef, bundle: ArgBundle, devices) -> Callable:
-        """AOT-compile the uniform chunk fn for this signature (the
-        bitstream-generation step)."""
+        """AOT-compile the uniform *pipelined* chunk fn for this signature
+        (the bitstream-generation step).  The compiled executable is
+
+            chunk(ctx, bufs, ints, floats, budget) -> (ctx, bufs, done)
+
+        with ``ctx`` and ``bufs`` donated across chunks (the context and
+        payload stay device-resident for the task's whole life on the
+        region), ``budget`` a reusable non-donated scalar, and ``done`` an
+        independent snapshot of the post-chunk flag that the worker can
+        poll after the context has been donated onward (DESIGN.md §8)."""
+        from repro.core.preemption import make_pipelined_chunk
+
         t0 = time.perf_counter()
-        chunk = jax.jit(kd.fn, donate_argnums=(0, 1))
+        chunk = jax.jit(make_pipelined_chunk(kd.fn), donate_argnums=(0, 1))
         bufs, ints, floats = bundle.padded()
         ctx = ContextRecord.fresh(budget=kd.default_budget)
         abstract = lambda t: jax.tree.map(
@@ -295,8 +305,9 @@ class ReconfigEngine:
         import jax.numpy as jnp
 
         bufs_a = tuple(abstract(jnp.asarray(b)) for b in bufs)
+        budget_a = jax.ShapeDtypeStruct((), jnp.int32)
         compiled = chunk.lower(abstract(ctx), bufs_a, abstract(ints),
-                               abstract(floats)).compile()
+                               abstract(floats), budget_a).compile()
         with self._lock:
             self.stats.total_compile_s += time.perf_counter() - t0
         return compiled

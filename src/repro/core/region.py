@@ -9,15 +9,27 @@ before the associated kernel launch — exactly §4.2.
 Preemption is cooperative-chunked (DESIGN.md §2.1): the worker checks the
 preempt flag between chunks, saves the context+payload through the
 double-buffered bank, and raises a TASK_PREEMPTED interrupt.
+
+The execution hot path is *chunk-pipelined* (DESIGN.md §8): the worker
+issues chunk *k+1* while chunk *k*'s ``done`` flag is still resolving on
+the device, polling the flag's independent snapshot without ever blocking
+dispatch.  The chunk executable is done-gated to identity, so the one
+speculative chunk issued beyond completion (or past a preemption point)
+computes nothing and results stay bit-identical to the synchronous path.
+Context and payload buffers stay device-resident across chunks (donated
+chunk-to-chunk) and across preempt/resume on the same region; the host
+copy of a preemption commit is produced lazily, only when a checkpoint,
+migration, or cross-region resume actually needs host bytes.
 """
 from __future__ import annotations
 
 import queue
 import threading
 import time
-from dataclasses import dataclass, field
+from collections import deque
+from dataclasses import dataclass
 from enum import Enum
-from typing import Any, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +40,19 @@ from repro.core.context import ContextBank, ContextRecord, Committed
 from repro.core.interrupts import Event, EventKind, InterruptController
 from repro.core.reconfig import ReconfigEngine
 from repro.core.task import Task, TaskStatus
+
+# host-side poll interval while the pipeline head resolves (the device is
+# busy with the speculative chunk during this wait, so the interval only
+# bounds preempt/failure response latency, not throughput)
+_POLL_S = 20e-6
+
+
+def _device_clone(tree):
+    """Device-side copy of a pytree of arrays (no host round trip).
+
+    Resume donates the context/payload into the first chunk; cloning keeps
+    the bank's committed copy intact for a later REGION_FAILED recovery."""
+    return jax.tree.map(lambda a: jnp.array(a, copy=True), tree)
 
 
 class RegionState(Enum):
@@ -53,19 +78,27 @@ class RegionStats:
     chunk_ewma_s: float = 0.0
     busy_s: float = 0.0
     reconfig_s: float = 0.0  # wall time this region spent reconfiguring
+    # chunk-pipeline accounting (DESIGN.md §8)
+    chunks_pipelined: int = 0   # chunks issued while a predecessor resolved
+    chunks_discarded: int = 0   # speculative identity chunks past done
+    host_spills_avoided: int = 0  # device-resident resumes (no host copy)
 
 
 class Region:
     def __init__(self, rid: int, engine: ReconfigEngine,
                  interrupts: InterruptController,
                  devices=None, geometry: Tuple[int, ...] = (1,),
-                 chunk_budget: Optional[int] = None):
+                 chunk_budget: Optional[int] = None,
+                 pipeline: bool = True):
         self.rid = rid
         self.engine = engine
         self.interrupts = interrupts
         self.devices = devices
         self.geometry = geometry
         self.chunk_budget = chunk_budget
+        # chunk-pipelined dispatch (False = the synchronous reference path,
+        # used by the bit-identity tests and the per-chunk-overhead bench)
+        self.pipeline = pipeline
         self.bank = ContextBank()
         self.loaded: Optional[tuple] = None  # (kernel, sig) "bitstream id"
         self.executable = None
@@ -75,6 +108,9 @@ class Region:
 
         self._q: "queue.Queue[tuple]" = queue.Queue()
         self._inflight = 0  # commands enqueued but not fully processed
+        # one lock serializes posting/draining commands and the inflight
+        # count, so repair() can drain-and-reject atomically (no command
+        # posted concurrently is ever half-counted or silently dropped)
         self._inflight_lock = threading.Lock()
         self._preempt = threading.Event()
         self._failed = threading.Event()
@@ -93,26 +129,29 @@ class Region:
 
     def shutdown(self):
         self._stop.set()
-        self._q.put(("noop", None))
+        self._q.put(("noop", None))  # wake the blocked worker
         if self._thread:
             self._thread.join(timeout=5)
 
     # -- commands (the per-region Controller queue) ---------------------
-    def _inc(self):
+    def _post(self, cmd: str, task):
+        """Atomically count and enqueue a command: a command is 'in flight'
+        from the moment it is posted until the worker fully processed it,
+        and ``repair()`` (same lock) can never observe the count and the
+        queue out of sync."""
         with self._inflight_lock:
             self._inflight += 1
+            self._q.put((cmd, task))
 
     def _dec(self):
         with self._inflight_lock:
             self._inflight -= 1
 
     def enqueue_reconfig(self, task: Task):
-        self._inc()
-        self._q.put(("reconfig", task))
+        self._post("reconfig", task)
 
     def enqueue_launch(self, task: Task):
-        self._inc()
-        self._q.put(("launch", task))
+        self._post("launch", task)
 
     def request_preempt(self):
         self._preempt.set()
@@ -136,8 +175,16 @@ class Region:
         self.state = RegionState.RETIRED
         self.shutdown()
 
-    def repair(self):
-        """Bring the region back (elastic grow).  Its bank survives."""
+    def repair(self) -> list:
+        """Bring the region back (elastic grow).  Its bank survives.
+
+        Returns the tasks of any ``launch`` commands that were still queued
+        when the dead worker was restarted: they were dispatched but never
+        ran, so the caller must requeue them (the scheduler's auto-repair
+        does).  The drain happens under the command lock, so a command
+        posted concurrently is either drained-and-returned or preserved
+        with a consistent inflight count — never silently lost in between.
+        """
         if self.state is RegionState.RETIRED:
             raise RuntimeError(
                 f"region {self.rid} is retired; add a new region instead")
@@ -150,19 +197,22 @@ class Region:
             # _check_failure and is still running — just lift the flag
             self._failed.clear()
             self.state = revived_state
-            return
+            return []
         self.state = revived_state
         self.loaded = None
         self.executable = None
         self.current_task = None
+        dropped = []
         with self._inflight_lock:
+            while True:
+                try:
+                    dropped.append(self._q.get_nowait())
+                except queue.Empty:
+                    break
             self._inflight = 0
-        while not self._q.empty():
-            try:
-                self._q.get_nowait()
-            except queue.Empty:
-                break
         self.start()
+        return [t for (cmd, t) in dropped
+                if cmd == "launch" and t is not None]
 
     @property
     def idle(self) -> bool:
@@ -185,10 +235,11 @@ class Region:
     # ------------------------------------------------------------------
     def _run(self):
         while not self._stop.is_set():
-            try:
-                cmd, task = self._q.get(timeout=0.2)
-            except queue.Empty:
-                continue
+            # event-driven: block until a command (or wakeup sentinel)
+            # arrives — no timeout polling.  Preempt requests interrupt a
+            # *running* task via the flag checks inside _do_launch; an idle
+            # worker has nothing to preempt.
+            cmd, task = self._q.get()
             if cmd == "noop":
                 continue
             try:
@@ -233,22 +284,48 @@ class Region:
         self.interrupts.raise_interrupt(Event(
             EventKind.RECONFIG_DONE, self.rid, task=task, payload=dt))
 
+    # -- launch argument preparation ------------------------------------
+    def _prepare(self, task: Task):
+        """Initial (ctx, bufs) for a launch, reusing device-resident state
+        wherever possible.
+
+        - fresh launch: pad-and-upload the argument buffers (``padded()``
+          is memoized per bundle, so a requeued task never re-pads);
+        - resume on the *same* region: the committed context/payload never
+          left device memory — clone it device-side (the bank keeps the
+          committed copy for failure recovery) and skip the host round
+          trip entirely;
+        - resume on a *different* region (migration, failover, elastic
+          rebalance): materialize the committed host copy on demand and
+          upload it here — the only place the spill actually happens.
+        """
+        saved: Optional[Committed] = task.saved_context
+        if saved is None:
+            bufs_np, _, _ = task.args.padded()
+            return (ContextRecord.fresh(),
+                    tuple(jnp.asarray(b) for b in bufs_np))
+        task.saved_context = None
+        if saved.device and saved.owner is self:
+            self.stats.host_spills_avoided += 1
+            ctx = _device_clone(saved.context)
+            if saved.payload is not None:
+                return ctx, tuple(_device_clone(b) for b in saved.payload)
+            bufs_np, _, _ = task.args.padded()
+            return ctx, tuple(jnp.asarray(b) for b in bufs_np)
+        host = saved.materialize()
+        ctx = jax.tree.map(jnp.asarray, host.context)
+        if host.payload is not None:
+            return ctx, tuple(jnp.asarray(b) for b in host.payload)
+        bufs_np, _, _ = task.args.padded()
+        return ctx, tuple(jnp.asarray(b) for b in bufs_np)
+
+    # -- the chunk-pipelined execution hot path -------------------------
     def _do_launch(self, task: Task):
         self._check_failure()
         kd = get_kernel(task.kernel)
         budget = self.chunk_budget or kd.default_budget
-        bufs, ints, floats = task.args.padded()
-        bufs = tuple(jnp.asarray(b) for b in bufs)
-
-        if task.saved_context is not None:
-            # resume: copy the committed context (and partial outputs) back
-            saved: Committed = task.saved_context
-            ctx = jax.tree.map(jnp.asarray, saved.context)
-            if saved.payload is not None:
-                bufs = tuple(jnp.asarray(b) for b in saved.payload)
-            task.saved_context = None
-        else:
-            ctx = ContextRecord.fresh(budget=budget)
+        _, ints, floats = task.args.padded()  # memoized device scalars
+        ctx, bufs = self._prepare(task)
 
         task.status = TaskStatus.RUNNING
         task.region_history.append(self.rid)
@@ -256,16 +333,61 @@ class Region:
             task.t_first_served = time.perf_counter()
         self.current_task = task
         t_busy0 = time.perf_counter()
+        budget_arr = jnp.int32(budget)  # non-donated: uploaded once per launch
+        depth = 1 if self.pipeline else 0
+        pending: "deque" = deque()  # done snapshots of unretired chunks
+        t_last = time.perf_counter()
+
+        def issue():
+            nonlocal ctx, bufs
+            if pending:  # overlapped with an unresolved predecessor
+                self.stats.chunks_pipelined += 1
+            ctx, bufs, done = self.executable(ctx, bufs, ints, floats,
+                                              budget_arr)
+            pending.append(done)
+
+        def retire(done: int):
+            """Account one resolved chunk boundary (EWMA, per-task work)."""
+            nonlocal t_last
+            dt = time.perf_counter() - t_last
+            if self.slowdown_s:
+                time.sleep(self.slowdown_s)
+                dt += self.slowdown_s
+            t_last = time.perf_counter()
+            a = 0.3
+            self.stats.chunk_ewma_s = (
+                dt if self.stats.chunks == 0
+                else a * dt + (1 - a) * self.stats.chunk_ewma_s)
+            self.stats.chunks += 1
+            task.run_s += dt  # per-task (and per-tenant) work attribution
+            return done
+
+        def drain() -> int:
+            """Resolve every in-flight chunk (blocking): real chunks are
+            retired, speculative identity chunks past ``done`` are
+            discarded.  Returns whether the task actually finished."""
+            done = 0
+            while pending:
+                v = int(pending.popleft())
+                if done:
+                    self.stats.chunks_discarded += 1
+                else:
+                    retire(v)
+                    done = v
+            return done
 
         while True:
             self._check_failure()
             if self._preempt.is_set():
                 self._preempt.clear()
-                # save context + partial outputs through the bank (BRAM) and
-                # hand the committed copy back to the scheduler
-                self.bank.commit(ctx, payload=tuple(
-                    np.asarray(jax.device_get(b)) for b in bufs),
-                    tid=task.tid)
+                if drain():  # completion raced the preempt: task is done
+                    break
+                # lazy spill: commit the device-resident context + partial
+                # outputs as-is (no host copy); the committed host bytes
+                # are produced on demand by whoever actually needs them
+                self.bank.commit(ctx, payload=bufs, tid=task.tid,
+                                 device=True, region_rid=self.rid,
+                                 owner=self)
                 task.saved_context = self.bank.restore()
                 task.status = TaskStatus.PREEMPTED
                 task.n_preemptions += 1
@@ -276,32 +398,43 @@ class Region:
                     EventKind.TASK_PREEMPTED, self.rid, task=task))
                 return
 
-            t0 = time.perf_counter()
-            ctx = ctx.with_budget(budget)
-            ctx, bufs = self.executable(ctx, bufs, ints, floats)
-            done = int(ctx.done)  # blocks until the chunk is ready
-            dt = time.perf_counter() - t0
-            if self.slowdown_s:
-                time.sleep(self.slowdown_s)
-                dt += self.slowdown_s
-            a = 0.3
-            self.stats.chunk_ewma_s = (
-                dt if self.stats.chunks == 0
-                else a * dt + (1 - a) * self.stats.chunk_ewma_s)
-            self.stats.chunks += 1
-            task.run_s += dt  # per-task (and per-tenant) work attribution
+            # keep the pipeline primed: the speculative chunk k+1 is issued
+            # before chunk k's done flag is read, so the device never idles
+            # across a chunk boundary waiting on the host
+            while len(pending) < depth + 1:
+                issue()
 
-            if done:
-                task.status = TaskStatus.DONE
-                task.t_done = time.perf_counter()
-                task.result = tuple(np.asarray(jax.device_get(b))
-                                    for b in bufs[:2])
-                self.stats.kernels_run += 1
-                self.current_task = None
-                self.stats.busy_s += time.perf_counter() - t_busy0
-                self.interrupts.raise_interrupt(Event(
-                    EventKind.TASK_DONE, self.rid, task=task))
-                return
+            # wait for the oldest chunk to resolve.  Pipelined: poll its
+            # snapshot so a preempt/failure request stays prompt during
+            # long chunks — the device is meanwhile busy with the
+            # speculative chunk, so this wait never blocks dispatch.
+            # Synchronous (depth 0): block on the flag directly, exactly
+            # the seed's per-chunk host round trip.
+            if depth:
+                head = pending[0]
+                while not head.is_ready():
+                    if self._preempt.is_set() or self._failed.is_set():
+                        break
+                    time.sleep(_POLL_S)
+                if self._preempt.is_set() or self._failed.is_set():
+                    continue  # handled at the loop top
+
+            if retire(int(pending.popleft())):
+                # remaining in-flight chunks were done-gated to identity:
+                # current ctx/bufs are bit-identical to the final state
+                self.stats.chunks_discarded += len(pending)
+                pending.clear()
+                break
+
+        task.status = TaskStatus.DONE
+        task.t_done = time.perf_counter()
+        task.result = tuple(np.asarray(jax.device_get(b))
+                            for b in bufs[:2])
+        self.stats.kernels_run += 1
+        self.current_task = None
+        self.stats.busy_s += time.perf_counter() - t_busy0
+        self.interrupts.raise_interrupt(Event(
+            EventKind.TASK_DONE, self.rid, task=task))
 
 
 class RegionFailure(Exception):

@@ -75,6 +75,15 @@ class SchedulerConfig:
     # prefer dispatching to an idle region whose loaded bitstream already
     # matches the task (saves the partial reconfiguration entirely).
     bitstream_affinity: bool = True
+    # same-bitstream task coalescing (DESIGN.md §8.3): when a region
+    # finishes a task and the policy's lookahead holds a queued task with
+    # the same executable key, dispatch it back-to-back on that region —
+    # no release, no reconfig, no requeue round trip (the serving analogue
+    # of continuous batching).  Policies only bend ordering *within* an
+    # equivalence class (priority level / background set / tenant FIFO),
+    # bounded by coalesce_window, so cross-class semantics are unchanged.
+    coalescing: bool = True
+    coalesce_window: int = 8
 
     def validate(self) -> "SchedulerConfig":
         if self.n_priorities < 1:
@@ -88,6 +97,9 @@ class SchedulerConfig:
             raise ValueError(
                 f"prefetch_lookahead must be >= 1, got "
                 f"{self.prefetch_lookahead}")
+        if self.coalesce_window < 1:
+            raise ValueError(
+                f"coalesce_window must be >= 1, got {self.coalesce_window}")
         if (self.policy or "").lower() not in POLICY_NAMES:
             raise ValueError(
                 f"unknown scheduling policy {self.policy!r}; "
@@ -151,6 +163,8 @@ class Scheduler:
         self._hinted = set()              # (tid, n_preemptions) already sent
         self._n_cancelled = 0
         self._stranded = 0
+        # same-bitstream back-to-back dispatches (reconfig+requeue saved)
+        self.coalesced_dispatches = 0
         # cross-shell handoffs (cluster migration): tid -> callback(task).
         # When a registered task is next checkpoint-preempted, the loop
         # resolves its local handle, skips the local requeue, and hands the
@@ -203,16 +217,22 @@ class Scheduler:
         with self._handoffs_lock:
             return self._handoffs.pop(tid, None) is not None
 
-    def run(self, tasks_to_arrive: List[Task], quiet: bool = True) -> dict:
+    def run(self, tasks_to_arrive: List[Task], quiet: bool = True,
+            handles: Optional[dict] = None) -> dict:
         """Paper batch mode (Algorithm 1): replay ``tasks_to_arrive``
         through ``submit()`` and drain.  Arrival times are honoured
-        relative to this call, exactly as the seed scheduler did."""
+        relative to this call, exactly as the seed scheduler did.
+        ``handles`` (optional dict) collects ``tid -> TaskHandle`` so
+        callers (e.g. the Controller) can event-wait on individual tasks
+        instead of polling their status."""
         with self._lifecycle_lock:
             if self._running:
                 raise RuntimeError("scheduler loop already running")
             self._submissions.reopen()  # batch reuse after a prior drain()
         for t in sorted(tasks_to_arrive, key=lambda t: t.arrival_time):
-            self.submit(t)
+            h = self.submit(t)
+            if handles is not None:
+                handles[t.tid] = h
         return self.run_forever(quiet=quiet, drain=True)
 
     def run_forever(self, quiet: bool = True, drain: bool = False) -> dict:
@@ -520,6 +540,9 @@ class Scheduler:
                 handle._resolve()
             if not quiet:
                 print(f"[{self.now():7.3f}] done   {ev.task} on R{ev.region_id}")
+            # same-bitstream coalescing: redispatch this still-warm region
+            # back-to-back before the general serve pass can requeue it
+            self._try_coalesce(self.shell.region(ev.region_id), quiet)
         elif ev.kind == EventKind.TASK_PREEMPTED:
             self._preempt_pending.discard(ev.region_id)
             if self.shell.region(ev.region_id).dispatchable:
@@ -600,7 +623,40 @@ class Scheduler:
                 self._preempt_pending.add(victim.rid)
                 victim.request_preempt()
 
+    def _try_coalesce(self, region: Region, quiet=True) -> bool:
+        """Same-bitstream task coalescing (DESIGN.md §8.3): the region just
+        finished a task and still holds its bitstream; if the policy's
+        window has a queued task with the same executable key (and the
+        policy's cross-class semantics allow serving it now), dispatch it
+        to this region immediately — skipping the release, the reconfig,
+        and one event-loop round trip."""
+        if (not self.cfg.coalescing or self._stop_req.is_set()
+                or self.cfg.full_reconfig_mode  # keep the paper's baseline
+                or region.loaded is None or not region.dispatchable
+                or region.rid in self._preempt_pending):
+            return False
+        kernel, sig, _geom = region.loaded
+
+        def matches(t: Task) -> bool:
+            return t.kernel == kernel and t.args.signature() == sig
+
+        task = self.policy.peek_same_bitstream(matches, region,
+                                               self.cfg.coalesce_window)
+        if task is None or not self.policy.take(task):
+            return False
+        handle = self._handles.get(task.tid)
+        if handle is not None and not handle._claim():
+            return False  # lost the race against a client-side cancel()
+        self._idle_hint.discard(region.rid)
+        self.coalesced_dispatches += 1
+        self._dispatch(region, task, quiet)
+        self._refresh_prefetch_hints()
+        if not quiet:
+            print(f"[{self.now():7.3f}] coalesce {task} -> R{region.rid}")
+        return True
+
     def _dispatch(self, region: Region, task: Task, quiet=True):
+        task.last_dispatched_rid = region.rid
         key = (task.kernel, task.args.signature(), region.geometry)
         if self.cfg.full_reconfig_mode:
             if region.loaded != key:
@@ -659,7 +715,33 @@ class Scheduler:
             if self.now() - t_dead >= self.cfg.repair_after_s:
                 region = self.shell.region(rid)
                 if region.state is not RegionState.RETIRED:
-                    region.repair()
+                    # launch commands that were still queued on the dead
+                    # worker were dispatched but never ran — requeue them
+                    # (repair's single-lock drain hands them back instead
+                    # of silently dropping a racing enqueue).  A task whose
+                    # failure fired during its *reconfig* command was
+                    # already requeued by the REGION_FAILED handler while
+                    # its launch command still sat in the queue: skip
+                    # anything already pending or the same Task would be
+                    # dispatched twice concurrently.
+                    dropped = region.repair()
+                    if dropped:
+                        pending = self.policy.pending_tasks()
+                        for task in dropped:
+                            # a never-started launch is still QUEUED; any
+                            # other status means the task moved on (done,
+                            # cancelled, or already running elsewhere)
+                            if task.status is not TaskStatus.QUEUED:
+                                continue
+                            if any(t is task for t in pending):
+                                continue  # REGION_FAILED requeued it
+                            if task.last_dispatched_rid != rid:
+                                # requeued by the failure handler AND
+                                # already re-dispatched to another region
+                                # (whose worker may not have started it
+                                # yet): this drained command is stale
+                                continue
+                            self._enqueue(task, requeue=True)
                 del self._dead_since[rid]
 
     def _maybe_checkpoint(self):
@@ -747,8 +829,8 @@ class Scheduler:
                 "resize_events": [],
                 "region_seconds": len(self.shell.regions) * wall,
             }
-        busy_total = sum(r.stats.busy_s
-                         for r in self.shell._by_rid.values())
+        regions_ever = list(self.shell._by_rid.values())
+        busy_total = sum(r.stats.busy_s for r in regions_ever)
         pool_stats["utilization"] = (
             busy_total / pool_stats["region_seconds"]
             if pool_stats["region_seconds"] > 0 else 0.0)
@@ -780,6 +862,15 @@ class Scheduler:
             "preemptions": sum(t.n_preemptions for t in tasks),
             "migrations": sum(t.n_migrations for t in tasks),
             "migrated_out": self.migrated_out,
+            # chunk-pipeline + coalescing accounting (DESIGN.md §8)
+            "chunks": sum(r.stats.chunks for r in regions_ever),
+            "chunks_pipelined": sum(r.stats.chunks_pipelined
+                                    for r in regions_ever),
+            "chunks_discarded": sum(r.stats.chunks_discarded
+                                    for r in regions_ever),
+            "host_spills_avoided": sum(r.stats.host_spills_avoided
+                                       for r in regions_ever),
+            "coalesced_dispatches": self.coalesced_dispatches,
             "reconfigs": es.partial_loads,
             "full_reconfigs": es.full_reconfigs,
             "cache_hits": es.cache_hits,

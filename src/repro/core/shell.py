@@ -39,7 +39,8 @@ class Shell:
                  cache_capacity: Optional[int] = None,
                  prefetch: bool = True,
                  prefetch_max_queue: int = 64,
-                 region_widths: Optional[Sequence[int]] = None):
+                 region_widths: Optional[Sequence[int]] = None,
+                 pipeline: bool = True):
         self.devices = list(devices if devices is not None else jax.devices())
         self.interrupts = InterruptController()
         self.engine = ReconfigEngine(simulate_partial_s=simulate_partial_s,
@@ -50,6 +51,9 @@ class Shell:
             self.engine, max_queue=prefetch_max_queue, auto_start=False)
         self.prefetch_enabled = prefetch
         self.chunk_budget = chunk_budget
+        # chunk-pipelined region dispatch (DESIGN.md §8); False forces the
+        # synchronous reference path on every region (bench baseline arm)
+        self.pipeline = pipeline
         # test/bench hook inherited by regions added later (elastic grow)
         self.region_slowdown_s: float = 0.0
         self.floorplanner = Floorplanner(self.devices,
@@ -75,7 +79,7 @@ class Shell:
         self._next_rid += 1
         r = Region(rid, self.engine, self.interrupts,
                    devices=list(devices), geometry=(len(devices),),
-                   chunk_budget=self.chunk_budget)
+                   chunk_budget=self.chunk_budget, pipeline=self.pipeline)
         r.slowdown_s = self.region_slowdown_s
         self.floorplanner.bind(rid, devices)
         self.regions.append(r)
@@ -145,7 +149,11 @@ class Shell:
         }
         rep["regions"] = {
             r.rid: {"reconfigs": r.stats.reconfigs,
-                    "reconfig_s": r.stats.reconfig_s}
+                    "reconfig_s": r.stats.reconfig_s,
+                    "chunks": r.stats.chunks,
+                    "chunks_pipelined": r.stats.chunks_pipelined,
+                    "chunks_discarded": r.stats.chunks_discarded,
+                    "host_spills_avoided": r.stats.host_spills_avoided}
             for r in self.regions
         }
         return rep

@@ -62,6 +62,10 @@ class Task:
     # serving run's start, so it cannot be recomputed after that run ends)
     deadline_missed: bool = False
     region_history: list = field(default_factory=list)
+    # rid of the region the scheduler last dispatched this task to (loop
+    # thread only).  Repair's dropped-command requeue keys on it: a task
+    # already re-dispatched to another region must not be requeued again.
+    last_dispatched_rid: Optional[int] = None
 
     @property
     def service_time(self) -> Optional[float]:

@@ -51,20 +51,30 @@ def test_controller_end_to_end():
 
 def _run_soup(preemption: bool, seed: int = 15, n_tasks: int = 12,
               n_regions: int = 2, rate: float = 0.3,
-              slowdown: float = 0.01):
+              slowdown: float = 0.05):
     rng = np.random.default_rng(seed)
 
     def arg_factory(r, k):
         img = make_image(r, SIZE)
         kd = get_kernel(k)
         return kd.bundle(img, np.zeros_like(img), H=SIZE, W=SIZE,
-                         iters=int(r.integers(1, 4)))
+                         iters=int(r.integers(2, 5)))
 
     tasks = generate_random_tasks(rng, ["MedianBlur", "GaussianBlur"],
                                   n_tasks, rate, arg_factory)
-    shell = Shell(n_regions=n_regions, chunk_budget=2)
+    # tasks must be long enough (many chunks x slowdown) that urgent
+    # arrivals land mid-execution: the chunk-pipelined engine serves a
+    # same-bitstream queue head back-to-back on completion (coalescing),
+    # so short tasks drain without preemption ever being *needed* — the
+    # contention this test is about needs real mid-task arrivals.
+    # Prewarm both bitstreams so the cold-compile window (during which a
+    # region has no current_task and cannot be chosen as a victim) does
+    # not hide the preemption opportunities either.
+    shell = Shell(n_regions=n_regions, chunk_budget=1)
+    for kname in ("MedianBlur", "GaussianBlur"):
+        shell.engine.prewarm(kname, tasks[0].args, (1,))
     for r_ in shell.regions:
-        r_.slowdown_s = slowdown  # make tasks long enough to contend
+        r_.slowdown_s = slowdown
     sched = Scheduler(shell, SchedulerConfig(preemption=preemption))
     rep = sched.run(tasks, quiet=True)
     shell.shutdown()
