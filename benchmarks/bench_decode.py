@@ -1,0 +1,81 @@
+"""Token-serving arm (DESIGN.md §9): continuous-batching decode throughput,
+single-region vs prefill/decode-disaggregated 2-region shells, under a
+simulated partial-reconfiguration cost.
+
+On one region the prefill and decode bitstreams evict each other — every
+phase alternation pays the ICAP latency.  Disaggregated, each region keeps
+its phase's bitstream permanently warm, so the fabric swaps ~never after
+warmup; the acceptance bar is >= 1.3x decode tokens/s over the
+single-region build (every stream in both arms is oracle-verified by the
+driver before it reports).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+# the ICAP cost that the disaggregated floorplan amortises away
+PARTIAL_S = 0.025
+SPEEDUP_BAR = 1.3
+
+_ARMS = ("1region", "2region-disagg")
+
+
+def run_decode_cell(arm: str, *, n_sequences: int = 10, prompt_len: int = 8,
+                    max_new: int = 12, seed: int = 0) -> dict:
+    from repro.launch.serve import serve_decode
+
+    disagg = arm == "2region-disagg"
+    rep = serve_decode(n_sequences=n_sequences, prompt_len=prompt_len,
+                       max_new=max_new, slots=4, round_tokens=4,
+                       d_model=64, vocab=101,
+                       n_regions=2 if disagg else 1,
+                       disaggregate=disagg, partial_s=PARTIAL_S,
+                       seed=seed, verify=True, quiet=True)
+    return {
+        "cfg": {"arm": arm, "n_sequences": n_sequences,
+                "partial_s": PARTIAL_S},
+        "tokens_out": rep["tokens_out"],
+        "tokens_per_s": rep["tokens_per_s"],
+        "wall_s": rep["wall_s"],
+        "ttft_p50_s": rep["ttft_p50_s"],
+        "ttft_p99_s": rep["ttft_p99_s"],
+        "decode_rounds": rep["decode_rounds"],
+        "state_device_rounds": rep["state_device_rounds"],
+        "prefill_tasks": rep["prefill_tasks"],
+    }
+
+
+def measure_decode(printer=print, cache_path: str = "bench_decode.json",
+                   use_cache: bool = True, **cell_kwargs):
+    if use_cache and os.path.exists(cache_path):
+        with open(cache_path) as f:
+            results = json.load(f)
+    else:
+        results = [run_decode_cell(arm, **cell_kwargs) for arm in _ARMS]
+        with open(cache_path, "w") as f:
+            json.dump(results, f)
+    printer("# decode arm: single-region vs prefill/decode-disaggregated "
+            "serving (name,us_per_call,derived)")
+    for r in results:
+        arm = r["cfg"]["arm"]
+        printer(f"decode/{arm}_tok,{1e6 / max(r['tokens_per_s'], 1e-9):.0f},"
+                f"tok_per_s={r['tokens_per_s']:.1f};"
+                f"ttft_p99_us={r['ttft_p99_s']*1e6:.0f};"
+                f"rounds={r['decode_rounds']};"
+                f"device_resident={r['state_device_rounds']}")
+    by_arm = {r["cfg"]["arm"]: r for r in results}
+    one, two = by_arm["1region"], by_arm["2region-disagg"]
+    ratio = two["tokens_per_s"] / max(one["tokens_per_s"], 1e-9)
+    printer(f"decode/headline,{1e6 / max(two['tokens_per_s'], 1e-9):.0f},"
+            f"disagg_vs_1region={ratio:.2f}x;"
+            f"ttft_p99_ratio="
+            f"{two['ttft_p99_s'] / max(one['ttft_p99_s'], 1e-9):.2f}")
+    assert ratio >= SPEEDUP_BAR, (
+        f"disaggregated serving only {ratio:.2f}x over single-region "
+        f"(bar: {SPEEDUP_BAR}x) — phase bitstreams are thrashing")
+    return results
+
+
+if __name__ == "__main__":
+    measure_decode(use_cache=False)

@@ -68,6 +68,14 @@ def main() -> None:
     else:
         bench_service_time.measure_cluster(use_cache=not args.no_cache)
 
+    # token-serving arm (single-region vs prefill/decode-disaggregated
+    # continuous batching, DESIGN.md §9); same fast-mode caching contract
+    if args.fast and not os.path.exists("bench_decode.json"):
+        print("decode/skipped,0,fast-mode")
+    else:
+        from benchmarks import bench_decode
+        bench_decode.measure_decode(use_cache=not args.no_cache)
+
     if args.fast and not os.path.exists("bench_sweep.json"):
         print("sweep/skipped,0,fast-mode")
         return

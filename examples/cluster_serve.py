@@ -1,5 +1,5 @@
 """Multi-shell cluster demo (DESIGN.md §7): two shells behind one
-``ClusterFrontend``, a long task checkpoint-migrated from shell 0 to
+``repro.Client``, a long task checkpoint-migrated from shell 0 to
 shell 1 mid-run (bit-identical result), then a whole-shell failure whose
 outstanding tasks fail over to the survivor — nothing lost.
 
@@ -9,7 +9,7 @@ import time
 
 import numpy as np
 
-from repro.cluster import ClusterFrontend
+import repro
 from repro.controller.kernels import get_kernel
 from repro.core.task import Task, TaskStatus
 from repro.kernels.blur.tasks import make_image
@@ -29,7 +29,10 @@ def make_task(rng):
 
 def main():
     rng = np.random.default_rng(0)
-    fe = ClusterFrontend(n_shells=2, regions_per_shell=1, chunk_budget=1)
+    # the same Client constructor, now a 2-shell cluster fabric; submit()
+    # and the returned handles work identically to the one-shell case
+    client = repro.Client(n_shells=2, n_regions=1, chunk_budget=1)
+    fe = client.cluster
     for node in fe.nodes:
         node.shell.region_slowdown_s = 0.03
         for r in node.shell.regions:
@@ -37,11 +40,11 @@ def main():
 
     # -- 1. reference: one task served uninterrupted --------------------
     ref_task = make_task(np.random.default_rng(0))
-    ref = fe.submit(ref_task).result(timeout=120)
+    ref = client.submit(ref_task).result(timeout=120)
 
     # -- 2. the same payload, checkpoint-migrated between shells --------
     mig_task = make_task(np.random.default_rng(0))  # identical stream
-    handle = fe.submit(mig_task)
+    handle = client.submit(mig_task)
     while handle.status is not TaskStatus.RUNNING:
         time.sleep(0.005)
     time.sleep(0.2)  # let it commit some checkpointed progress
@@ -54,14 +57,14 @@ def main():
 
     # -- 3. failover: kill shell 0 with work outstanding -----------------
     tasks = [make_task(rng) for _ in range(4)]
-    handles = [fe.submit(t) for t in tasks]
+    handles = [client.submit(t) for t in tasks]
     time.sleep(0.2)
     print("\n!!! injecting whole-shell failure on shell 0\n")
     fe.nodes[0].inject_failure()
     for h in handles:
         h.result(timeout=120)  # all finish on the survivor
 
-    rep = fe.shutdown()
+    rep = client.shutdown()
     print("--- cluster report ---")
     print(f"tasks done:   {rep['n_done']} / {rep['n_submitted']}"
           f"  (lost: {rep['lost_tasks']}, stranded: "

@@ -1,6 +1,7 @@
 """Elastic fault tolerance demo: a region dies mid-task; the scheduler
 recovers the task from the region bank's last committed context, migrates it
 to the surviving region, and (optionally) re-admits the repaired region.
+Submission goes through ``repro.Client`` (the client owns the serving loop).
 
     PYTHONPATH=src python examples/failure_recovery.py
 """
@@ -9,8 +10,9 @@ import time
 
 import numpy as np
 
+import repro
 from repro.controller.kernels import get_kernel
-from repro.core.scheduler import Scheduler, SchedulerConfig
+from repro.core.scheduler import SchedulerConfig
 from repro.core.shell import Shell
 from repro.core.task import Task
 from repro.kernels.blur.tasks import make_image
@@ -24,7 +26,7 @@ def main():
         Task(kernel="MedianBlur",
              args=kd.bundle(make_image(rng, 100), np.zeros_like(img),
                             H=100, W=100, iters=3),
-             priority=2, arrival_time=0.02 * i)
+             priority=2)
         for i in range(4)
     ]
 
@@ -32,7 +34,7 @@ def main():
     shell.engine.prewarm("MedianBlur", tasks[0].args, (1,))
     for r in shell.regions:
         r.slowdown_s = 0.02
-    sched = Scheduler(shell, SchedulerConfig(
+    client = repro.Client(backend=shell, scheduler_config=SchedulerConfig(
         preemption=True, repair_after_s=0.8, straggler_factor=None))
 
     def killer():
@@ -49,8 +51,11 @@ def main():
 
     th = threading.Thread(target=killer)
     th.start()
-    rep = sched.run(tasks, quiet=False)
+    handles = [client.submit(t) for t in tasks]
+    for h in handles:
+        h.result(timeout=120)
     th.join()
+    rep = client.drain(timeout=60.0)
     shell.shutdown()
 
     print("\n--- recovery report ---")

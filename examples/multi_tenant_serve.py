@@ -6,25 +6,24 @@ paper's FPGA scheduler targets, at LM scale.
 The training job is wrapped as a Controller kernel whose context checkpoints
 (step counter) live in the region bank; each chunk = `budget` training steps.
 
-This example drives the *online* scheduler API: ``Scheduler.run_forever()``
-serves from a background thread while the client submits live through
-``Scheduler.submit()`` and waits on the returned ``TaskHandle`` futures —
-no workload is handed over up front.
+This example drives the *online* submission API through ``repro.Client``:
+the client owns the serving loop; callers submit live ``Task``s and wait
+on the returned handles — no workload is handed over up front.
 
     PYTHONPATH=src python examples/multi_tenant_serve.py
 """
-import threading
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro
 from repro.configs import get_config
 from repro.controller.abi import ArgBundle
 from repro.controller.kernels import KernelDef, register_kernel_def
 from repro.core.preemption import for_save
-from repro.core.scheduler import Scheduler, SchedulerConfig
+from repro.core.scheduler import SchedulerConfig
 from repro.core.shell import Shell
 from repro.core.task import Task
 from repro.data.pipeline import DataConfig, SyntheticTokens
@@ -74,13 +73,15 @@ def train_kernel(ctx, bufs, ints, floats):
 
 
 def serve_kernel(ctx, bufs, ints, floats):
-    """One-shot serving request: prefill a prompt batch, return last logits."""
+    """One-shot serving request: prefill a prompt batch, write last logits
+    into the dedicated ``out`` buffer (slot 1) — chunked kernels must keep
+    every buffer slot's shape/dtype stable across the chunk boundary."""
     tokens = bufs[0].astype(jnp.int32)
     params = jax.tree.unflatten(
         jax.tree.structure(_STATE0["params"]),
-        list(bufs[1:1 + len(jax.tree.leaves(_STATE0["params"]))]))
+        list(bufs[2:2 + len(jax.tree.leaves(_STATE0["params"]))]))
     _, last = _prefill(params, {"tokens": tokens})
-    out = (last.astype(jnp.float32),) + tuple(bufs[1:])
+    out = (bufs[0], last.astype(jnp.float32)) + tuple(bufs[2:])
     return ctx.finish(), out
 
 
@@ -94,22 +95,18 @@ def main():
     n_p = len(jax.tree.leaves(_STATE0["params"]))
     register_kernel_def(KernelDef(
         name="ServeLM", backend="PYNQ", fn=serve_kernel,
-        ktile_args=("tokens",) + tuple(f"p{i}" for i in range(n_p)),
+        ktile_args=("tokens", "out") + tuple(f"p{i}" for i in range(n_p)),
         int_args=(), float_args=(), default_budget=1))
 
     # NOTE: this example bypasses the 4-slot ArgBundle padding (LM state has
     # many leaves); it drives Region/Scheduler through raw ArgBundles.
     import repro.controller.abi as abi
-    abi.N_BUF_SLOTS = max(n_leaves, n_p + 1)
+    abi.N_BUF_SLOTS = max(n_leaves, n_p + 2)
 
     shell = Shell(n_regions=2, chunk_budget=2)
-    sched = Scheduler(shell, SchedulerConfig(preemption=True))
-
-    # serve live: the scheduler loop runs in the background, clients submit
-    server = threading.Thread(target=sched.run_forever,
-                              name="scheduler-loop", daemon=True)
-    server.start()
-    sched.wait_until_serving(timeout=10.0)
+    # the Client wraps the shell in a Scheduler and owns the serving loop
+    client = repro.Client(backend=shell,
+                          scheduler_config=SchedulerConfig(preemption=True))
 
     t0 = time.time()
     train_task = Task(
@@ -117,28 +114,28 @@ def main():
         args=ArgBundle(bufs=tuple(np.asarray(x) for x in _LEAVES0),
                        ints=(12,)),
         priority=4, tenant="training")
-    train_handle = sched.submit(train_task)
+    train_handle = client.submit(train_task)
 
     prompts = np.asarray(DATA.batch(3)["tokens"][:, :32])
+    logits_buf = np.zeros((prompts.shape[0], CFG.vocab_size), np.float32)
     p_leaves = tuple(np.asarray(x)
                      for x in jax.tree.leaves(_STATE0["params"]))
     serve_handles = []
     for i in range(3):
         time.sleep(0.3)  # serving requests trickle in while training runs
-        h = sched.submit(Task(
+        h = client.submit(Task(
             kernel="ServeLM",
-            args=ArgBundle(bufs=(prompts,) + p_leaves, ints=()),
+            args=ArgBundle(bufs=(prompts, logits_buf) + p_leaves, ints=()),
             priority=0, tenant="serving"))
         serve_handles.append(h)
 
     for i, h in enumerate(serve_handles):
-        logits = h.result(timeout=300.0)[0]
+        logits = h.result(timeout=300.0)[1]
         print(f"[client] serve request {i} done "
               f"(status={h.status.value}, logits {logits.shape})")
     train_handle.result(timeout=300.0)
 
-    rep = sched.drain(timeout=60.0)
-    server.join(timeout=10.0)
+    rep = client.drain(timeout=60.0)
     shell.shutdown()
     print("\n--- multi-tenant report ---")
     print(f"done={rep['n_done']} preemptions={rep['preemptions']} "

@@ -1,67 +1,74 @@
-"""Quickstart — the paper's use case end-to-end in ~40 lines of user code.
+"""Quickstart — the paper's use case end-to-end in ~40 lines of user code,
+through the unified ``repro.Client`` facade.
 
 An accelerator is partitioned into two reconfigurable regions; blur tasks of
 mixed priority arrive; a high-priority task preempts a running low-priority
 one (its context checkpoints to the region's bank and it resumes later).
+The same client then streams two token-serving sequences (DESIGN.md §9).
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import time
+
 import numpy as np
 
-from repro.controller.controller import Controller
+import repro
 from repro.controller.hittile import HitTile
-from repro.core.shell import Shell
 from repro.kernels.blur.tasks import make_image
+from repro.serving.engine import ServingConfig
 
 
 def main():
     rng = np.random.default_rng(0)
 
-    # The shell: static infrastructure owning the device grid, partitioned
-    # into 2 reconfigurable regions (paper §4.1).  chunk_budget bounds the
-    # preemption latency (DESIGN.md §2.1).
-    shell = Shell(n_regions=2, chunk_budget=2)
-    for r in shell.regions:
+    # One client = one shell with 2 reconfigurable regions (paper §4.1);
+    # chunk_budget bounds the preemption latency (DESIGN.md §2.1).
+    client = repro.Client(n_regions=2, chunk_budget=2,
+                          serving=ServingConfig(d_model=32, vocab_size=257))
+    for r in client.shell.regions:
         r.slowdown_s = 0.05  # pretend tasks are long (CPU demo)
-    ctrl = Controller(shell)
 
     # Low-priority background work ...
-    img1 = make_image(rng, 200)
-    bg = ctrl.launch("MedianBlur", (HitTile.of(img1),
-                                    HitTile.zeros(img1.shape)),
-                     priority=4, H=200, W=200, iters=3)
-    img2 = make_image(rng, 200)
-    bg2 = ctrl.launch("MedianBlur", (HitTile.of(img2),
-                                     HitTile.zeros(img2.shape)),
-                      priority=4, H=200, W=200, iters=3)
+    img1, img2 = make_image(rng, 200), make_image(rng, 200)
+    bg = client.launch("MedianBlur", (HitTile.of(img1),
+                                      HitTile.zeros(img1.shape)),
+                       priority=4, H=200, W=200, iters=3)
+    bg2 = client.launch("MedianBlur", (HitTile.of(img2),
+                                       HitTile.zeros(img2.shape)),
+                        priority=4, H=200, W=200, iters=3)
 
     # ... and an URGENT task arriving a moment later: with both regions
     # busy, the scheduler preempts a priority-4 task to serve it.
+    time.sleep(0.35)
     img3 = make_image(rng, 200)
-    urgent = ctrl.launch("GaussianBlur", (HitTile.of(img3),
-                                          HitTile.zeros(img3.shape)),
-                         priority=0, H=200, W=200, iters=1,
-                         arrival_time=0.35)
+    urgent = client.launch("GaussianBlur", (HitTile.of(img3),
+                                            HitTile.zeros(img3.shape)),
+                           priority=0, H=200, W=200, iters=1)
 
-    # generate the "bitstreams" ahead of time so the demo's timeline is
-    # about scheduling, not first-compile latency
-    shell.engine.prewarm("MedianBlur", bg.args, (1,))
-    shell.engine.prewarm("GaussianBlur", urgent.args, (1,))
+    out = urgent.result(timeout=120)
+    bg.result(timeout=120), bg2.result(timeout=120)
+    del out
 
-    report = ctrl.run(quiet=False)
-    ctrl.shutdown()
+    # same client, same handle idiom: stream generated tokens live
+    s1 = client.stream([3, 1, 4, 1, 5], max_new_tokens=8, seed=1)
+    s2 = client.stream([2, 7, 1, 8], max_new_tokens=8, seed=2)
+    print(f"\nstreamed tokens: {list(s1)} and {list(s2)}")
 
+    report = client.report()
+    client.shutdown()
+
+    bgt, bg2t, ut = bg.task, bg2.task, urgent.task
     print("\n--- report ---")
     print(f"tasks done:        {report['n_done']}")
     print(f"preemptions:       {report['preemptions']}")
     print(f"partial reconfigs: {report['reconfigs']} "
           f"(cache hits {report['cache_hits']}, "
           f"cold compiles {report['cold_compiles']})")
-    print(f"urgent service time: {urgent.service_time*1000:.1f} ms "
-          f"(background: {bg.service_time*1000:.1f} ms)")
-    print(f"background task was preempted {bg.n_preemptions + bg2.n_preemptions}x "
+    print(f"urgent service time: {ut.service_time*1000:.1f} ms "
+          f"(background: {bgt.service_time*1000:.1f} ms)")
+    print(f"background was preempted {bgt.n_preemptions + bg2t.n_preemptions}x "
           f"and still produced the right result: "
-          f"{np.isfinite(bg.result[1]).all()}")
+          f"{np.isfinite(np.asarray(bgt.result[1])).all()}")
 
 
 if __name__ == "__main__":

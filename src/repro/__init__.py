@@ -5,3 +5,12 @@ scheduling in FPGAs using partial reconfiguration" (Rodriguez-Canal et al.,
 2022), adapted FPGA->TPU per DESIGN.md.
 """
 __version__ = "1.0.0"
+
+
+def __getattr__(name):
+    # lazy: importing ``repro`` must stay free of jax/scheduler imports
+    if name == "Client":
+        from repro.client import Client
+
+        return Client
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

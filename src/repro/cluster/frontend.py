@@ -180,9 +180,12 @@ def _clone_for_resume(task: Task, committed: Optional[Committed],
         # deadline_s is relative to each serving loop's start; translate
         # through the absolute clock so urgency survives the hop
         deadline = max(0.0, src_sched.t0 + deadline - dst_sched.t0)
+    # phase survives the hop (phase-affinity routing of the resume);
+    # region_pin deliberately does NOT — pins are shell-local rids.
     clone = Task(kernel=task.kernel, args=task.args, priority=task.priority,
                  arrival_time=0.0, deadline_s=deadline, tenant=task.tenant,
-                 footprint=task.footprint, tid=task.tid)
+                 footprint=task.footprint, phase=task.phase,
+                 sequence=task.sequence, tid=task.tid)
     clone.saved_context = committed
     clone.t_arrived = task.t_arrived          # end-to-end turnaround
     clone.t_first_served = task.t_first_served
@@ -813,8 +816,10 @@ class ClusterFrontend:
                     rep["pool"]["region_seconds"]
                     * rep["pool"]["utilization"]),
             })
+        from repro.core.reporting import stamp
+
         pct = Scheduler._percentile   # same nearest-rank estimator as the
-        return {                      # per-shell reports
+        return stamp("cluster", {     # per-shell reports
             "cluster": True,
             "n_shells": len(self.nodes),
             "router": self.router.name,
@@ -831,4 +836,4 @@ class ClusterFrontend:
                                   for s in per_shell.values()),
             **counters,
             "per_shell": per_shell,
-        }
+        })

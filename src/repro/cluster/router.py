@@ -19,6 +19,10 @@ actually has:
 - ``power-aware`` — weight each shell's load by its energy model
   (``NodePowerModel.cost_per_region_second``): heterogeneous fleets route
   to the cheapest incremental joules, not the emptiest queue.
+- ``phase-affinity`` — serving disaggregation (DESIGN.md §9): tasks
+  tagged with a ``Task.phase`` (prefill/decode) stick to a per-phase home
+  shell, so each phase's bitstreams stay warm on their own silicon;
+  phase-less work is steered off the phase homes when alternatives exist.
 
 Every policy only ever *ranks healthy candidates the frontend hands it* —
 health filtering and footprint feasibility stay in the frontend, so a
@@ -30,7 +34,8 @@ from typing import Optional, Sequence
 
 from repro.core.task import Task
 
-ROUTER_NAMES = ("least-loaded", "bitstream-affinity", "power-aware")
+ROUTER_NAMES = ("least-loaded", "bitstream-affinity", "power-aware",
+                "phase-affinity")
 
 
 class RouterPolicy:
@@ -83,6 +88,44 @@ class PowerAware(RouterPolicy):
         return min(nodes, key=lambda n: (joules(n), n.node_id))
 
 
+class PhaseAffinity(RouterPolicy):
+    """Serving-phase disaggregation: each distinct ``Task.phase`` gets a
+    sticky *home shell* (least-loaded at first sight), so its bitstream
+    kind stays permanently warm there.  The home is abandoned — and
+    re-picked — only when it dies or falls ``max_load_gap`` behind the
+    coldest candidate, mirroring ``BitstreamAffinity``'s convoy guard.
+    Phase-less tasks avoid the homes whenever other shells exist."""
+
+    name = "phase-affinity"
+
+    def __init__(self, max_load_gap: float = 4.0):
+        if max_load_gap <= 0:
+            raise ValueError(
+                f"max_load_gap must be > 0, got {max_load_gap}")
+        self.max_load_gap = max_load_gap
+        self._home: dict = {}  # phase -> node_id
+
+    def choose(self, task, nodes):
+        phase = getattr(task, "phase", None)
+        if phase is None:
+            homes = set(self._home.values())
+            pool = [n for n in nodes if n.node_id not in homes] or nodes
+            return min(pool, key=lambda n: (n.load(), n.node_id))
+        coldest = min(n.load() for n in nodes)
+        home = self._home.get(phase)
+        if home is not None:
+            for n in nodes:
+                if (n.node_id == home
+                        and n.load() - coldest <= self.max_load_gap):
+                    return n
+        # (re)pick a home, preferring shells not serving another phase
+        others = {nid for p, nid in self._home.items() if p != phase}
+        pool = [n for n in nodes if n.node_id not in others] or nodes
+        pick = min(pool, key=lambda n: (n.load(), n.node_id))
+        self._home[phase] = pick.node_id
+        return pick
+
+
 def make_router_policy(name: str,
                        max_load_gap: Optional[float] = None) -> RouterPolicy:
     """Build a router policy by registry name (mirrors ``make_policy``);
@@ -95,5 +138,8 @@ def make_router_policy(name: str,
                 else BitstreamAffinity(max_load_gap=max_load_gap))
     if key == "power-aware":
         return PowerAware()
+    if key == "phase-affinity":
+        return (PhaseAffinity() if max_load_gap is None
+                else PhaseAffinity(max_load_gap=max_load_gap))
     raise ValueError(
         f"unknown router policy {name!r}; known: {', '.join(ROUTER_NAMES)}")

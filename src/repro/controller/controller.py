@@ -1,5 +1,11 @@
 """Controller entity — the user-facing host API (paper §3).
 
+.. deprecated::
+    ``repro.Client`` is the unified front door (``submit``/``launch``
+    for tasks, ``stream`` for token serving, one handle API across
+    shell/pool/cluster).  The Controller keeps working as a thin batch
+    shim over the same scheduler, but new code should use the Client.
+
     shell = Shell(n_regions=2)
     ctrl = Controller(shell)
     t = ctrl.launch("MedianBlur", hittiles, H=600, W=600, iters=2, priority=1)
@@ -13,6 +19,7 @@ from __future__ import annotations
 
 import threading
 import time
+import warnings
 from typing import Dict, List
 
 from repro.controller.kernels import get_kernel
@@ -39,6 +46,10 @@ class _HandleRegistry(dict):
 
 class Controller:
     def __init__(self, shell: Shell, scheduler_config: SchedulerConfig = None):
+        warnings.warn(
+            "Controller is deprecated; use repro.Client — the unified "
+            "submit/stream facade over shell, pool, and cluster backends",
+            DeprecationWarning, stacklevel=2)
         self.shell = shell
         self.scheduler = Scheduler(shell, scheduler_config)
         self._submitted: List[Task] = []

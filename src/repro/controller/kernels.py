@@ -33,6 +33,11 @@ class KernelDef:
     # this kernel needs — the floorplanner sizes heterogeneous region
     # slices against the declared footprints of the pending workload
     footprint: int = 1
+    # device-resident results (DESIGN.md §9): keep ``Task.result`` as the
+    # final device buffers instead of host-copying bufs[:2].  The serving
+    # engine threads a decode round's KV state straight into the next
+    # round's ArgBundle without a host round trip.
+    device_result: bool = False
 
     def bundle(self, *bufs, **scalars) -> ArgBundle:
         """Build an ArgBundle from declared argument names."""
@@ -49,31 +54,37 @@ def ctrl_kernel(name: str, backend: str = "PYNQ",
                 int_args: Sequence[str] = (),
                 float_args: Sequence[str] = (),
                 default_budget: int = 64,
-                footprint: int = 1):
+                footprint: int = 1,
+                device_result: bool = False):
     def deco(fn):
         kd = KernelDef(name=name, backend=backend, fn=fn,
                        ktile_args=tuple(ktile_args), int_args=tuple(int_args),
                        float_args=tuple(float_args),
                        default_budget=default_budget,
-                       footprint=footprint)
+                       footprint=footprint,
+                       device_result=device_result)
         _REGISTRY[name] = kd
         return fn
 
     return deco
 
 
-def get_kernel(name: str) -> KernelDef:
-    # importing the blur task kernels registers the paper's workload set
+def _register_builtin():
+    # importing the task modules registers the paper's workload set (blur)
+    # and the token-serving prefill/decode kernels
     import repro.kernels.blur.tasks  # noqa: F401
+    import repro.serving.kernels  # noqa: F401
 
+
+def get_kernel(name: str) -> KernelDef:
+    _register_builtin()
     if name not in _REGISTRY:
         raise KeyError(f"kernel {name!r} not registered; have {sorted(_REGISTRY)}")
     return _REGISTRY[name]
 
 
 def kernel_names() -> list:
-    import repro.kernels.blur.tasks  # noqa: F401
-
+    _register_builtin()
     return sorted(_REGISTRY)
 
 

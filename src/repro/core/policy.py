@@ -42,7 +42,13 @@ POLICY_NAMES = ("fcfs", "edf", "wfq")
 
 def region_fits(task: Task, region) -> bool:
     """Placement feasibility (DESIGN.md §6.2): the region's device slice
-    must be at least as wide as the task's resource footprint."""
+    must be at least as wide as the task's resource footprint, and the
+    region must be in the task's pin set when one is declared (the
+    serving engine's prefill/decode disaggregation pins each phase to its
+    own regions — DESIGN.md §9)."""
+    pin = getattr(task, "region_pin", None)
+    if pin is not None and region.rid not in pin:
+        return False
     need = getattr(task, "footprint", None) or 1
     devs = getattr(region, "devices", None)
     capacity = len(devs) if devs is not None else 1

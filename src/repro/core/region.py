@@ -302,8 +302,14 @@ class Region:
         saved: Optional[Committed] = task.saved_context
         if saved is None:
             bufs_np, _, _ = task.args.padded()
+            # host buffers upload fresh per dispatch; a buffer that is
+            # already a device array (serving rounds thread the previous
+            # round's KV state in directly) must be cloned — the chunk
+            # executable donates its inputs, and the bundle's memoized
+            # buffer must survive for a post-failure re-dispatch
             return (ContextRecord.fresh(),
-                    tuple(jnp.asarray(b) for b in bufs_np))
+                    tuple(jnp.asarray(b) if isinstance(b, np.ndarray)
+                          else _device_clone(b) for b in bufs_np))
         task.saved_context = None
         if saved.device and saved.owner is self:
             self.stats.host_spills_avoided += 1
@@ -428,8 +434,14 @@ class Region:
 
         task.status = TaskStatus.DONE
         task.t_done = time.perf_counter()
-        task.result = tuple(np.asarray(jax.device_get(b))
-                            for b in bufs[:2])
+        if kd.device_result:
+            # serving kernels: hand the final device buffers back as-is —
+            # the engine streams the token buffer host-side but threads the
+            # KV state into the next round without a host round trip
+            task.result = tuple(bufs)
+        else:
+            task.result = tuple(np.asarray(jax.device_get(b))
+                                for b in bufs[:2])
         self.stats.kernels_run += 1
         self.current_task = None
         self.stats.busy_s += time.perf_counter() - t_busy0

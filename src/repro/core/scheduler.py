@@ -38,7 +38,9 @@ from dataclasses import dataclass
 from typing import List, Optional
 
 from repro.core.interrupts import Event, EventKind
-from repro.core.policy import (POLICY_NAMES, SchedulingPolicy, make_policy)
+from repro.core.policy import (POLICY_NAMES, SchedulingPolicy, make_policy,
+                               region_fits)
+from repro.core.reporting import stamp
 from repro.core.region import Region, RegionState
 from repro.core.shell import Shell
 from repro.core.submit import SubmissionQueue, TaskHandle
@@ -614,10 +616,14 @@ class Scheduler:
             return
         for candidate in self.policy.preempt_candidates():
             # draining regions are excluded: their task is already being
-            # checkpoint-preempted by the pool's retirement path
+            # checkpoint-preempted by the pool's retirement path.  Only
+            # regions the candidate could actually run on are victims —
+            # preempting a region outside its pin set (or narrower than
+            # its footprint) frees nothing the candidate can use.
             running = [r for r in self.shell.regions
                        if r.dispatchable
-                       and r.rid not in self._preempt_pending]
+                       and r.rid not in self._preempt_pending
+                       and region_fits(candidate, r)]
             victim = self.policy.choose_victim(candidate, running)
             if victim is not None:
                 self._preempt_pending.add(victim.rid)
@@ -844,7 +850,7 @@ class Scheduler:
                     "prefetch_hit_rate", "prefetch_stale_drops",
                     "evictions", "full_reconfigs", "total_stall_s"):
             detail.pop(dup, None)
-        return {
+        return stamp("scheduler", {
             "n_done": len(tasks),
             "wall_s": wall,
             "throughput_tps": len(tasks) / wall,
@@ -883,4 +889,4 @@ class Scheduler:
             "dispatch_stall_s": es.total_stall_s,
             "pool": pool_stats,
             "reconfig": detail,
-        }
+        })

@@ -139,7 +139,10 @@ class Shell:
         return list(dict.fromkeys(r.geometry for r in self.alive_regions()))
 
     def reconfig_report(self) -> dict:
-        """Engine + prefetcher + per-region reconfiguration statistics."""
+        """Engine + prefetcher + per-region reconfiguration statistics
+        (``report_version`` stamped — see ``core/reporting.py``)."""
+        from repro.core.reporting import stamp
+
         rep = self.engine.report()
         rep["prefetcher"] = {
             "enabled": self.prefetch_enabled,
@@ -156,4 +159,4 @@ class Shell:
                     "host_spills_avoided": r.stats.host_spills_avoided}
             for r in self.regions
         }
-        return rep
+        return stamp("shell_reconfig", rep)

@@ -46,6 +46,18 @@ class Task:
     # this task needs.  None = inherit the kernel's declared
     # ``KernelDef.footprint`` at admission (default 1).
     footprint: Optional[int] = None
+    # serving phase tag (DESIGN.md §9): "prefill" | "decode" | None.  The
+    # token-serving engine tags its tasks so phase-aware routing (cluster)
+    # and disaggregated region pinning can tell the two bitstream kinds
+    # apart without parsing kernel names.
+    phase: Optional[str] = None
+    # hard placement pin: region ids this task may run on (None = any).
+    # Pins are shell-local (rids), so they do NOT survive cross-shell
+    # migration — the cluster clone drops them.
+    region_pin: Optional[frozenset] = None
+    # the Sequence this task serves, if any (serving engine back-reference;
+    # opaque to the scheduler)
+    sequence: Any = None
     tid: int = field(default_factory=lambda: next(_ids))
     status: TaskStatus = TaskStatus.PENDING
     # context of a preempted task (host-side committed copy)

@@ -1,9 +1,17 @@
-"""Serving drivers.
+"""Serving drivers — ``serve <subcommand>`` CLI.
+
+    PYTHONPATH=src python -m repro.launch.serve <lm|scheduler|cluster|decode> ...
+
+Legacy ``--mode X`` invocations are translated to the ``X`` subcommand
+(with a deprecation note); bare invocations default to ``lm``.  Each
+subcommand accepts only its own flags — an inapplicable option (e.g.
+``--shells`` under ``scheduler``) is a hard argparse error, not a
+silently ignored knob.
 
 LM mode — prefill a batch of prompts, then greedy-decode:
 
-    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \
-        --prompt-len 32 --gen 16
+    PYTHONPATH=src python -m repro.launch.serve lm --arch rwkv6-1.6b \
+        --reduced --prompt-len 32 --gen 16
 
 Scheduler mode — serve a kernel-task stream through the preemptive
 scheduler under a pluggable policy (--policy fcfs|edf|wfq) and report the
@@ -352,62 +360,241 @@ def serve_cluster(*, n_shells: int = 2, regions_per_shell: int = 1,
     return rep
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=("lm", "scheduler", "cluster"),
-                    default="lm")
-    ap.add_argument("--arch", default="qwen3-8b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--n-tasks", type=int, default=16)
-    ap.add_argument("--regions", type=int, default=2)
-    ap.add_argument("--seed", type=int, default=0,
-                    help="RNG seed for task streams, arrival gaps and "
-                         "payloads (reproducible smokes/benchmarks)")
-    ap.add_argument("--policy", choices=("fcfs", "edf", "wfq"),
-                    default="fcfs")
-    ap.add_argument("--open-loop", action="store_true",
+def serve_decode(*, n_sequences: int = 6, prompt_len: int = 12,
+                 max_new: int = 12, slots: int = 4, round_tokens: int = 4,
+                 d_model: int = 384, vocab: int = 51865, n_regions: int = 2,
+                 disaggregate: bool = True, preempt_every: int = 0,
+                 partial_s: float = 0.0, seed: int = 0, verify: bool = True,
+                 metrics_out: str = None, quiet: bool = False) -> dict:
+    """Token-serving driver (DESIGN.md §9): submit ``n_sequences``
+    generation requests through the continuous-batching ``ServingEngine``
+    over a preemptive scheduler, verify every streamed sequence against
+    the NumPy oracle (bit-identity regardless of batching/preemption),
+    and return the ``serving``-layer report.
+
+    ``disaggregate=True`` pins decode rounds to the last region (its
+    ``SeqDecode`` bitstream stays permanently warm) and prefills to the
+    others; ``preempt_every=N`` checkpoint-preempts every Nth decode
+    round mid-flight (the streams must still verify).  Defaults are
+    whisper_tiny scale (d_model=384, vocab=51865).
+    """
+    import json
+    import threading
+
+    from repro.core.scheduler import Scheduler, SchedulerConfig
+    from repro.core.shell import Shell
+    from repro.serving.engine import ServingConfig, ServingEngine
+    from repro.serving.kernels import oracle_stream
+    from repro.serving.sequence import SamplingParams
+
+    rng = np.random.default_rng(seed)
+    # probing needs real mid-round boundaries: one token per chunk, and
+    # stretched chunks so the probe lands before the round drains (same
+    # slowdown hook the straggler tests use)
+    shell = Shell(n_regions=n_regions,
+                  chunk_budget=1 if preempt_every else 2,
+                  simulate_partial_s=partial_s)
+    if preempt_every:
+        for r in shell.regions:
+            r.slowdown_s = 0.02
+    sched = Scheduler(shell, SchedulerConfig())
+    server = threading.Thread(target=sched.run_forever,
+                              name="scheduler-loop", daemon=True)
+    server.start()
+    sched.wait_until_serving(timeout=10.0)
+
+    rids = [r.rid for r in shell.regions]
+    if disaggregate and len(rids) > 1:
+        prefill_pin, decode_pin = rids[:-1], rids[-1:]
+    else:
+        prefill_pin = decode_pin = None
+    cfg = ServingConfig(d_model=d_model, vocab_size=vocab, max_slots=slots,
+                        round_tokens=round_tokens,
+                        prefill_regions=prefill_pin,
+                        decode_regions=decode_pin,
+                        preempt_probe_every=preempt_every)
+    engine = ServingEngine(sched, cfg).start()
+
+    specs, handles = [], []
+    for i in range(n_sequences):
+        plen = int(rng.integers(2, prompt_len + 1))
+        prompt = [int(x) for x in rng.integers(0, vocab, size=plen)]
+        mx = int(rng.integers(2, max_new + 1))
+        specs.append((prompt, i, mx))
+        handles.append(engine.submit(
+            prompt, SamplingParams(max_new_tokens=mx, seed=i)))
+
+    mismatches = 0
+    for h, (prompt, sd, mx) in zip(handles, specs):
+        got = h.result(timeout=300.0)
+        if verify:
+            ref = oracle_stream(prompt, sd, mx, d_model, vocab)
+            if got != ref:
+                mismatches += 1
+                print(f"[decode] sequence #{h.sid} MISMATCH: "
+                      f"{got[:6]}... != {ref[:6]}...")
+    rep = engine.drain(timeout=60.0)
+    sched.drain(timeout=60.0)
+    shell.shutdown()
+    if metrics_out:
+        with open(metrics_out, "w") as f:
+            json.dump(rep, f, indent=2, default=str)
+        if not quiet:
+            print(f"[decode] metrics written to {metrics_out}")
+    if not quiet:
+        mode = "disaggregated" if disaggregate else "shared"
+        print(f"[decode] {rep['n_finished']}/{n_sequences} sequences "
+              f"({mode}, {slots} slots x {round_tokens} tok rounds): "
+              f"{rep['tokens_out']} tokens at {rep['tokens_per_s']:.1f} "
+              f"tok/s, ttft p50 {rep['ttft_p50_s']*1000:.0f}ms / "
+              f"p99 {rep['ttft_p99_s']*1000:.0f}ms")
+        print(f"[decode] {rep['prefill_tasks']} prefills, "
+              f"{rep['decode_rounds']} decode rounds "
+              f"({rep['state_device_rounds']} device-resident), "
+              f"{rep['decode_preemptions']} mid-decode preemptions, "
+              f"{rep['decode_migrations']} migrations, "
+              f"{rep['stranded_sequences']} stranded")
+    if verify and mismatches:
+        raise SystemExit(
+            f"[decode] {mismatches} sequence(s) diverged from the oracle")
+    if rep["stranded_sequences"] or rep["n_finished"] != n_sequences:
+        raise SystemExit(
+            f"[decode] incomplete serve: {rep['n_finished']}/{n_sequences} "
+            f"finished, {rep['stranded_sequences']} stranded")
+    return rep
+
+
+_SUBCOMMANDS = ("lm", "scheduler", "cluster", "decode")
+
+
+def _translate_legacy(argv):
+    """Map pre-subcommand invocations (``--mode X ...`` or bare flag
+    soup) onto the ``X`` subcommand so existing CI scripts keep working."""
+    if argv and argv[0] in _SUBCOMMANDS:
+        return argv
+    if argv and argv[0] in ("-h", "--help"):
+        return argv
+    mode = None
+    out = []
+    i = 0
+    while i < len(argv):
+        a = argv[i]
+        if a == "--mode" and i + 1 < len(argv):
+            mode = argv[i + 1]
+            i += 2
+            continue
+        if a.startswith("--mode="):
+            mode = a.split("=", 1)[1]
+            i += 1
+            continue
+        out.append(a)
+        i += 1
+    mode = mode or "lm"
+    print(f"[serve] note: flat '--mode {mode}' flags are deprecated; "
+          f"use 'serve {mode} ...'")
+    return [mode] + out
+
+
+def main(argv=None):
+    import sys
+
+    argv = _translate_legacy(sys.argv[1:] if argv is None else list(argv))
+
+    # flags shared by every scheduling subcommand
+    common = argparse.ArgumentParser(add_help=False)
+    common.add_argument("--seed", type=int, default=0,
+                        help="RNG seed for task streams, arrival gaps and "
+                             "payloads (reproducible smokes/benchmarks)")
+    common.add_argument("--metrics-out", default=None,
+                        help="write the final versioned report JSON here")
+    common.add_argument("--quiet", action="store_true")
+    stream_common = argparse.ArgumentParser(add_help=False)
+    stream_common.add_argument("--n-tasks", type=int, default=16)
+    stream_common.add_argument("--regions", type=int, default=2)
+    stream_common.add_argument("--policy", choices=("fcfs", "edf", "wfq"),
+                               default="fcfs")
+    stream_common.add_argument("--arrival-rate", type=float, default=4.0,
+                               help="open-loop Poisson arrival rate (tasks/s)")
+    stream_common.add_argument("--burst", type=int, default=1,
+                               help="submit N tasks back-to-back per "
+                                    "arrival gap (bursty trace)")
+    stream_common.add_argument("--no-prefetch", action="store_true")
+
+    ap = argparse.ArgumentParser(prog="serve")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    lm = sub.add_parser("lm", parents=[common],
+                        help="LM prefill + greedy decode timing")
+    lm.add_argument("--arch", default="qwen3-8b")
+    lm.add_argument("--reduced", action="store_true")
+    lm.add_argument("--batch", type=int, default=4)
+    lm.add_argument("--prompt-len", type=int, default=32)
+    lm.add_argument("--gen", type=int, default=16)
+
+    sc = sub.add_parser("scheduler", parents=[common, stream_common],
+                        help="preemptive single-shell task-stream server")
+    sc.add_argument("--open-loop", action="store_true",
                     help="submit tasks live via Scheduler.submit() instead "
                          "of replaying a pre-generated batch")
-    ap.add_argument("--arrival-rate", type=float, default=4.0,
-                    help="open-loop Poisson arrival rate (tasks/s)")
-    ap.add_argument("--tenants", type=int, default=1,
+    sc.add_argument("--tenants", type=int, default=1,
                     help="assign tasks round-robin to N tenants")
-    ap.add_argument("--burst", type=int, default=1,
-                    help="open-loop: submit N tasks back-to-back per "
-                         "arrival gap (bursty trace)")
-    ap.add_argument("--autoscale", action="store_true",
+    sc.add_argument("--autoscale", action="store_true",
                     help="elastic region pool: start at --min-regions and "
                          "autoscale up to --max-regions under load")
-    ap.add_argument("--min-regions", type=int, default=1)
-    ap.add_argument("--max-regions", type=int, default=3)
-    ap.add_argument("--metrics-out", default=None,
-                    help="write the final Scheduler.report() JSON here on "
-                         "drain/shutdown")
-    ap.add_argument("--no-prefetch", action="store_true")
-    ap.add_argument("--cache-capacity", type=int, default=None)
-    # cluster mode (DESIGN.md §7)
-    ap.add_argument("--shells", type=int, default=2,
-                    help="cluster: number of shell nodes")
-    ap.add_argument("--router", choices=("least-loaded",
+    sc.add_argument("--min-regions", type=int, default=1)
+    sc.add_argument("--max-regions", type=int, default=3)
+    sc.add_argument("--cache-capacity", type=int, default=None)
+
+    cl = sub.add_parser("cluster", parents=[common, stream_common],
+                        help="multi-shell fabric (router, migration, "
+                             "failover)")
+    cl.add_argument("--shells", type=int, default=2,
+                    help="number of shell nodes")
+    cl.add_argument("--router", choices=("least-loaded",
                                          "bitstream-affinity",
-                                         "power-aware"),
+                                         "power-aware", "phase-affinity"),
                     default="least-loaded")
-    ap.add_argument("--no-rebalance", action="store_true",
-                    help="cluster: disable the automatic load rebalancer")
-    ap.add_argument("--force-migrations", type=int, default=0,
-                    help="cluster: checkpoint-migrate this many running "
-                         "tasks off the busiest shell mid-trace")
-    ap.add_argument("--fail-shell", type=int, default=None,
-                    help="cluster: inject a whole-node failure on this "
-                         "shell mid-trace (failover exercise)")
-    ap.add_argument("--fail-after", type=int, default=None,
-                    help="cluster: submit count after which --fail-shell "
-                         "fires (default: half the trace)")
-    args = ap.parse_args()
-    if args.mode == "cluster":
+    cl.add_argument("--no-rebalance", action="store_true",
+                    help="disable the automatic load rebalancer")
+    cl.add_argument("--force-migrations", type=int, default=0,
+                    help="checkpoint-migrate this many running tasks off "
+                         "the busiest shell mid-trace")
+    cl.add_argument("--fail-shell", type=int, default=None,
+                    help="inject a whole-node failure on this shell "
+                         "mid-trace (failover exercise)")
+    cl.add_argument("--fail-after", type=int, default=None,
+                    help="submit count after which --fail-shell fires "
+                         "(default: half the trace)")
+
+    dc = sub.add_parser("decode", parents=[common],
+                        help="continuous-batching token serving "
+                             "(DESIGN.md §9)")
+    dc.add_argument("--sequences", type=int, default=6)
+    dc.add_argument("--prompt-len", type=int, default=12,
+                    help="max prompt length (lengths drawn uniformly)")
+    dc.add_argument("--max-new", type=int, default=12,
+                    help="max generated tokens per sequence")
+    dc.add_argument("--slots", type=int, default=4,
+                    help="decode slots per round (continuous batch width)")
+    dc.add_argument("--round-tokens", type=int, default=4,
+                    help="tokens per decode round (admission granularity)")
+    dc.add_argument("--d-model", type=int, default=384,
+                    help="surrogate LM state width (whisper_tiny default)")
+    dc.add_argument("--vocab", type=int, default=51865)
+    dc.add_argument("--regions", type=int, default=2)
+    dc.add_argument("--no-disaggregate", action="store_true",
+                    help="share all regions between prefill and decode "
+                         "instead of pinning decode to a dedicated region")
+    dc.add_argument("--preempt-every", type=int, default=0,
+                    help="checkpoint-preempt every Nth decode round "
+                         "mid-flight (streams must stay bit-identical)")
+    dc.add_argument("--partial-s", type=float, default=0.0,
+                    help="simulated partial-reconfiguration latency")
+    dc.add_argument("--no-verify", action="store_true",
+                    help="skip the per-sequence oracle bit-identity check")
+
+    args = ap.parse_args(argv)
+    if args.cmd == "cluster":
         serve_cluster(n_shells=args.shells,
                       regions_per_shell=args.regions // args.shells or 1,
                       n_tasks=args.n_tasks, seed=args.seed,
@@ -418,9 +605,8 @@ def main():
                       fail_shell=args.fail_shell,
                       fail_after=args.fail_after,
                       prefetch=not args.no_prefetch,
-                      metrics_out=args.metrics_out)
-        return
-    if args.mode == "scheduler":
+                      metrics_out=args.metrics_out, quiet=args.quiet)
+    elif args.cmd == "scheduler":
         serve_task_stream(n_tasks=args.n_tasks, n_regions=args.regions,
                           seed=args.seed,
                           prefetch=not args.no_prefetch,
@@ -431,13 +617,24 @@ def main():
                           min_regions=args.min_regions,
                           max_regions=args.max_regions,
                           metrics_out=args.metrics_out,
-                          cache_capacity=args.cache_capacity)
-        return
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    serve(cfg, batch=args.batch, prompt_len=args.prompt_len, gen=args.gen,
-          seed=args.seed)
+                          cache_capacity=args.cache_capacity,
+                          quiet=args.quiet)
+    elif args.cmd == "decode":
+        serve_decode(n_sequences=args.sequences, prompt_len=args.prompt_len,
+                     max_new=args.max_new, slots=args.slots,
+                     round_tokens=args.round_tokens, d_model=args.d_model,
+                     vocab=args.vocab, n_regions=args.regions,
+                     disaggregate=not args.no_disaggregate,
+                     preempt_every=args.preempt_every,
+                     partial_s=args.partial_s, seed=args.seed,
+                     verify=not args.no_verify,
+                     metrics_out=args.metrics_out, quiet=args.quiet)
+    else:
+        cfg = get_config(args.arch)
+        if args.reduced:
+            cfg = cfg.reduced()
+        serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
+              gen=args.gen, seed=args.seed)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,27 @@
+"""Token-serving engine (DESIGN.md §9): continuous batching of generation
+sequences over preemptible prefill/decode region kernels.
+
+Lazy exports: ``controller.kernels._register_builtin`` imports
+``repro.serving.kernels`` through this package, which must not drag the
+engine (and its scheduler imports) into every kernel lookup.
+"""
+_EXPORTS = {
+    "SamplingParams": "repro.serving.sequence",
+    "Sequence": "repro.serving.sequence",
+    "SequenceCancelled": "repro.serving.sequence",
+    "SequenceError": "repro.serving.sequence",
+    "SequenceHandle": "repro.serving.sequence",
+    "SequenceStatus": "repro.serving.sequence",
+    "ServingConfig": "repro.serving.engine",
+    "ServingEngine": "repro.serving.engine",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,166 @@
+"""Prefill / decode region kernels for the token-serving engine
+(DESIGN.md §9) — two distinct *bitstream kinds*, exactly as the paper's
+tasks are distinct partial bitstreams: a region must reconfigure to move
+between the prefill and decode phases, which is what makes phase
+disaggregation (pinned decode regions that never swap) measurably faster
+than a single region thrashing between both bitstreams.
+
+The model is a **deterministic integer surrogate LM**: all arithmetic is
+wrapping int32, every update is row-independent, so a token stream is
+bit-identical regardless of batch composition, chunk boundaries,
+preemption, or which region/shell runs it — the property the serving
+tests assert at every decode chunk boundary.
+
+    state' = state * MIX_A + tok * (2*pos + 1) + pos * PHI + MIX_C
+    token  = ((sum(state') * MIX_A + MIX_C) & 0x7fffffff) % vocab
+
+``SeqPrefill`` folds the prompt into the hidden state one position per
+budget unit and emits the first token; ``SeqDecode`` advances up to S
+resident slots by one token per step, R steps (one *round*) per task —
+the continuous batcher re-composes slot occupancy between rounds.
+Both keep results device-resident (``device_result=True``): the engine
+threads a round's state buffers straight into the next round's bundle.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.controller.kernels import ctrl_kernel
+from repro.core.context import ContextRecord
+from repro.core.preemption import for_save
+
+# LCG-style mixing constants (wrapping int32 throughout).  PHI is the
+# signed-int32 bit pattern of 2654435761 (Knuth's multiplicative hash) —
+# kept signed so NumPy scalar promotion accepts it against int32 arrays.
+MIX_A = 1103515245
+MIX_C = 12345
+PHI = -1640531535
+
+SLOT_POS = 0            # the single checkpoint slot both kernels use
+# slots-table columns (SeqDecode bufs[2], i32[S, 8])
+COL_ACTIVE, COL_N_EMIT, COL_LAST_TOK = 0, 1, 2
+
+
+# -- surrogate LM (jnp: traced inside kernels) ---------------------------
+
+def _positions(d: int):
+    return jnp.arange(d, dtype=jnp.int32)
+
+
+def lm_step(state, tok):
+    """One token of context folded into the hidden state.
+    state: i32[S, D]; tok: i32[S] -> i32[S, D].  Row-independent."""
+    pos = _positions(state.shape[-1])
+    inj = tok[:, None] * (2 * pos + 1)[None, :] + pos[None, :] * PHI
+    return state * MIX_A + inj + MIX_C
+
+
+def lm_token(state, vocab):
+    """Greedy token readout.  state: i32[S, D] -> i32[S]."""
+    h = jnp.sum(state, axis=-1, dtype=jnp.int32) * MIX_A + MIX_C
+    return (h & 0x7FFFFFFF) % vocab
+
+
+# -- host-side twins (numpy, wrapping int32) -----------------------------
+
+def init_state(seed: int, d_model: int) -> np.ndarray:
+    """Deterministic initial hidden state for one sequence, i32[D]."""
+    with np.errstate(over="ignore"):
+        pos = np.arange(d_model, dtype=np.int32)
+        return (np.int32(seed + 1) * np.int32(MIX_A)
+                + pos * np.int32(PHI) + np.int32(MIX_C)).astype(np.int32)
+
+
+def _np_step(state: np.ndarray, tok: int) -> np.ndarray:
+    pos = np.arange(state.shape[-1], dtype=np.int32)
+    inj = np.int32(tok) * (2 * pos + 1) + pos * np.int32(PHI)
+    return (state * np.int32(MIX_A) + inj + np.int32(MIX_C)).astype(np.int32)
+
+
+def _np_token(state: np.ndarray, vocab: int) -> int:
+    h = state.sum(dtype=np.int32) * np.int32(MIX_A) + np.int32(MIX_C)
+    return int((int(h) & 0x7FFFFFFF) % vocab)
+
+
+def oracle_stream(prompt, seed: int, max_new_tokens: int,
+                  d_model: int, vocab: int) -> list:
+    """Pure-NumPy reference for one uninterrupted sequence: the exact
+    token stream the kernels must produce under ANY batching, chunking,
+    preemption, or migration schedule."""
+    with np.errstate(over="ignore"):
+        state = init_state(seed, d_model)
+        for t in prompt:
+            state = _np_step(state, int(t))
+        toks = [_np_token(state, vocab)]
+        while len(toks) < max_new_tokens:
+            state = _np_step(state, toks[-1])
+            toks.append(_np_token(state, vocab))
+        return toks
+
+
+# -- region kernels ------------------------------------------------------
+
+@ctrl_kernel("SeqPrefill", backend="PYNQ",
+             ktile_args=("out", "state", "prompt"),
+             int_args=("P", "D", "vocab", "prompt_len"),
+             default_budget=8, device_result=True)
+def seq_prefill(ctx: ContextRecord, bufs, ints, floats):
+    """Fold ``prompt[0, :prompt_len]`` into ``state`` (i32[1, D]) one
+    position per budget unit; on completion emit the first generated
+    token into ``out[0, 0]``.  bufs: (out i32[1, 8], state i32[1, D],
+    prompt i32[1, P])."""
+    out, state, prompt = bufs[0], bufs[1], bufs[2]
+    vocab, prompt_len = ints[2], ints[3]
+
+    def body_pos(ctx, i, st):
+        tok = jax.lax.dynamic_slice_in_dim(prompt, i, 1, axis=1)[:, 0]
+        st = lm_step(st, tok)
+        ctx = ctx.checkpoint(SLOT_POS, i + 1)
+        return ctx, st
+
+    ctx, state = for_save(ctx, SLOT_POS, 0, prompt_len, 1, body_pos, state)
+    finished = ctx.intr == 0
+    out_done = out.at[0, 0].set(lm_token(state, vocab)[0])
+    out = jnp.where(finished, out_done, out)
+    done_ctx = ctx.finish()
+    ctx = jax.tree.map(lambda a, b: jnp.where(finished, a, b), done_ctx, ctx)
+    return ctx, (out, state, prompt) + tuple(bufs[3:])
+
+
+@ctrl_kernel("SeqDecode", backend="PYNQ",
+             ktile_args=("out", "state", "slots"),
+             int_args=("S", "D", "R", "vocab"),
+             default_budget=4, device_result=True)
+def seq_decode(ctx: ContextRecord, bufs, ints, floats):
+    """One decode *round*: advance every active slot by one token per
+    step, R steps.  bufs: (out i32[S, R], state i32[S, D],
+    slots i32[S, 8]) with slots columns (active, n_emit, last_token).
+    A slot participates in step t iff active and t < n_emit; inactive
+    rows pass through untouched, so batch composition never perturbs a
+    resident sequence's stream."""
+    out, state, slots = bufs[0], bufs[1], bufs[2]
+    R = out.shape[1]
+    vocab = ints[3]
+
+    def body_t(ctx, t, st8):
+        state, out, slots = st8
+        live = jnp.logical_and(slots[:, COL_ACTIVE] == 1,
+                               t < slots[:, COL_N_EMIT])
+        st2 = lm_step(state, slots[:, COL_LAST_TOK])
+        tok2 = lm_token(st2, vocab)
+        state = jnp.where(live[:, None], st2, state)
+        out = out.at[:, t].set(jnp.where(live, tok2, out[:, t]))
+        slots = slots.at[:, COL_LAST_TOK].set(
+            jnp.where(live, tok2, slots[:, COL_LAST_TOK]))
+        ctx = ctx.checkpoint(SLOT_POS, t + 1)
+        return ctx, (state, out, slots)
+
+    ctx, (state, out, slots) = for_save(ctx, SLOT_POS, 0, R, 1, body_t,
+                                        (state, out, slots))
+    finished = ctx.intr == 0
+    done_ctx = ctx.finish()
+    ctx = jax.tree.map(lambda a, b: jnp.where(finished, a, b), done_ctx, ctx)
+    return ctx, (out, state, slots) + tuple(bufs[3:])
