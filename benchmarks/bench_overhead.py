@@ -106,6 +106,7 @@ def run_seed_arm(preempt_every: int = 0, *, size: int = 64, iters: int = 48,
     wall = time.perf_counter() - t0
     return {
         "pipeline": False,
+        "engine": "seed",
         "preempt_every": preempt_every,
         "migrate": False,
         "wall_s": wall,
@@ -115,40 +116,55 @@ def run_seed_arm(preempt_every: int = 0, *, size: int = 64, iters: int = 48,
         "chunks_pipelined": 0,
         "chunks_discarded": 0,
         "host_spills_avoided": 0,
+        "megakernel_launches": 0,
+        "flag_poll_exits": 0,
         "result": tuple(np.asarray(jax.device_get(b)) for b in bufs[:2]),
     }
 
 
 def run_pipeline_arm(pipeline: bool, preempt_every: int = 0, *,
-                     migrate: bool = False, size: int = 64, iters: int = 48,
-                     seed: int = 5) -> dict:
+                     engine: str = None, migrate: bool = False,
+                     size: int = 64, iters: int = 48, seed: int = 5) -> dict:
     """One microbench arm: a single MedianBlur task driven chunk by chunk
     on a region (budget 1 → one row block per chunk), with optional forced
     preemption every ``preempt_every`` chunks, resuming on the *other*
     region when ``migrate`` (the cross-region lazy-spill path).  Returns
-    wall time, chunk counts, pipeline stats, and the result buffers."""
+    wall time, chunk counts, pipeline stats, and the result buffers.
+
+    ``engine`` overrides the mode (``pipeline`` stays as the two-mode
+    selector for the original arms).  The megakernel arm cannot watch
+    chunk counts mid-launch (the whole loop is one dispatch; stats land at
+    launch end), so its preemption is driven by the deterministic one-shot
+    ``task.preempt_at_boundary`` arm instead — the device exits at exactly
+    the same boundaries the host-driven arms preempt at."""
     from repro.core.interrupts import EventKind
     from repro.core.shell import Shell
 
+    engine = engine or ("pipelined" if pipeline else "sync")
+    mega = engine == "megakernel"
     task, bundle = _pipeline_task(seed, size, iters)
     n_regions = 2 if migrate else 1
-    shell = Shell(n_regions=n_regions, chunk_budget=1, pipeline=pipeline,
+    shell = Shell(n_regions=n_regions, chunk_budget=1, engine=engine,
                   prefetch=False)
     try:
         for r in shell.regions:  # bitstreams warm: measure dispatch, not
-            shell.engine.prewarm("MedianBlur", bundle, r.geometry)  # compile
+            shell.engine.prewarm("MedianBlur", bundle, r.geometry,  # compile
+                                 program=shell.prefetcher.program)
         regions = shell.regions
         target = regions[0]
         target.enqueue_reconfig(task)
+        if mega and preempt_every:
+            task.preempt_at_boundary = preempt_every
         t0 = time.perf_counter()
         target.enqueue_launch(task)
         preemptions = 0
-        preempt_armed = bool(preempt_every)
+        preempt_armed = bool(preempt_every) and not mega
         total = lambda: sum(r.stats.chunks for r in regions)
         next_preempt = preempt_every
-        # no preemption to inject -> block quietly on the interrupt queue
-        # (a busy-polling driver thread would perturb the measurement)
-        wait_s = 0.0005 if preempt_every else 0.25
+        # no preemption to inject (or device-side arming) -> block quietly
+        # on the interrupt queue (a busy-polling driver thread would
+        # perturb the measurement)
+        wait_s = 0.0005 if (preempt_every and not mega) else 0.25
         while True:
             ev = shell.interrupts.wait(wait_s)
             if ev is not None and ev.kind is EventKind.TASK_DONE:
@@ -156,10 +172,12 @@ def run_pipeline_arm(pipeline: bool, preempt_every: int = 0, *,
             if ev is not None and ev.kind is EventKind.TASK_PREEMPTED:
                 preemptions += 1
                 next_preempt = total() + preempt_every
-                preempt_armed = True
+                preempt_armed = not mega
                 if migrate:  # resume on the other region (host spill path)
                     target = regions[preemptions % len(regions)]
                     target.enqueue_reconfig(task)
+                if mega:  # re-arm: same relative boundary, next launch
+                    task.preempt_at_boundary = preempt_every
                 target.enqueue_launch(task)
                 continue
             if (preempt_every and preempt_armed
@@ -170,6 +188,7 @@ def run_pipeline_arm(pipeline: bool, preempt_every: int = 0, *,
         chunks = total()
         return {
             "pipeline": pipeline,
+            "engine": engine,
             "preempt_every": preempt_every,
             "migrate": migrate,
             "wall_s": wall,
@@ -182,6 +201,10 @@ def run_pipeline_arm(pipeline: bool, preempt_every: int = 0, *,
                                     for r in regions),
             "host_spills_avoided": sum(r.stats.host_spills_avoided
                                        for r in regions),
+            "megakernel_launches": sum(r.stats.megakernel_launches
+                                       for r in regions),
+            "flag_poll_exits": sum(r.stats.flag_poll_exits
+                                   for r in regions),
             "result": tuple(np.asarray(b) for b in task.result),
         }
     finally:
@@ -227,6 +250,7 @@ def _ideal_us_per_chunk(size: int, iters: int, seed: int = 5,
 
 
 GATE_RATIO = 0.5  # pipelined per-chunk overhead must be <= 0.5x sync
+MEGA_GATE_RATIO = 0.1  # megakernel per-chunk overhead must be <= 0.1x sync
 
 
 def measure_chunk_pipeline(printer=print,
@@ -242,14 +266,18 @@ def measure_chunk_pipeline(printer=print,
     - ``sync``      — the rebuilt engine with the pipeline disabled (same
       executable, blocking flag read): the bit-identity reference mode;
     - ``pipelined`` — the chunk-pipelined engine (speculative issue +
-      async flag poll + lazy spill).
+      async flag poll + lazy spill);
+    - ``megakernel`` — the whole chunk loop in ONE dispatch (DESIGN.md
+      §10), preemption via the device-polled flag (deterministic
+      ``preempt_at_boundary`` arming at the same boundaries).
 
     Per-chunk *overhead* is the arm's wall time per chunk minus the
     device-bound ideal (the same executable issued back to back with no
     host reads).  The gate — enforced here and in CI — requires the
     pipelined no-preemption overhead to be at most ``GATE_RATIO`` of the
-    synchronous (seed) path's, and every arm's output — preempted and
-    migrated included — to be bit-identical to the synchronous reference.
+    synchronous (seed) path's, the megakernel's at most
+    ``MEGA_GATE_RATIO``, and every arm's output — preempted and migrated
+    included — to be bit-identical to the synchronous reference.
     """
     if use_cache and os.path.exists(cache_path):
         with open(cache_path) as f:
@@ -274,6 +302,8 @@ def measure_chunk_pipeline(printer=print,
             "pipelined": lambda spec: run_pipeline_arm(True, **spec,
                                                        size=size,
                                                        iters=iters),
+            "megakernel": lambda spec: run_pipeline_arm(
+                True, **spec, engine="megakernel", size=size, iters=iters),
         }
         for mode, runner in runners.items():
             for arm_name, spec in arm_specs.items():
@@ -288,25 +318,32 @@ def measure_chunk_pipeline(printer=print,
                 best["bit_identical"] = all(
                     np.array_equal(a, b) for a, b in zip(res, reference))
                 arms[f"{mode}/{arm_name}"] = best
-        mig = run_pipeline_arm(True, preempt_every=25, migrate=True,
-                               size=size, iters=iters)
-        res = mig.pop("result")
-        mig["bit_identical"] = all(
-            np.array_equal(a, b) for a, b in zip(res, reference))
-        arms["pipelined/migrated"] = mig
+        for mode in ("pipelined", "megakernel"):
+            mig = run_pipeline_arm(True, preempt_every=25, migrate=True,
+                                   engine=mode, size=size, iters=iters)
+            res = mig.pop("result")
+            mig["bit_identical"] = all(
+                np.array_equal(a, b) for a, b in zip(res, reference))
+            arms[f"{mode}/migrated"] = mig
         ideal = min(ideal, _ideal_us_per_chunk(size, iters))
         for a in arms.values():
             a["overhead_us_per_chunk"] = a["us_per_chunk"] - ideal
+        seed_overhead = max(arms["seed/none"]["overhead_us_per_chunk"], 1e-9)
         ratio = (arms["pipelined/none"]["overhead_us_per_chunk"]
-                 / max(arms["seed/none"]["overhead_us_per_chunk"], 1e-9))
+                 / seed_overhead)
+        mega_ratio = (arms["megakernel/none"]["overhead_us_per_chunk"]
+                      / seed_overhead)
         result = {
             "config": {"size": size, "iters": iters, "budget": 1,
                        "repeats": repeats},
             "ideal_us_per_chunk": ideal,
             "arms": arms,
             "overhead_ratio_no_preempt": ratio,
+            "overhead_ratio_megakernel": mega_ratio,
             "gate": {"threshold": GATE_RATIO,
-                     "pass": bool(ratio <= GATE_RATIO)},
+                     "mega_threshold": MEGA_GATE_RATIO,
+                     "pass": bool(ratio <= GATE_RATIO
+                                  and mega_ratio <= MEGA_GATE_RATIO)},
         }
         with open(cache_path, "w") as f:
             json.dump(result, f, indent=1)
@@ -321,13 +358,22 @@ def measure_chunk_pipeline(printer=print,
                 f"spills_avoided={a['host_spills_avoided']};"
                 f"bit_identical={a['bit_identical']}")
     ratio = result["overhead_ratio_no_preempt"]
+    mega_ratio = result["overhead_ratio_megakernel"]
     printer(f"chunk_pipeline/headline,"
             f"{result['arms']['pipelined/none']['overhead_us_per_chunk']:.0f},"
             f"overhead_ratio={ratio:.3f};gate<={GATE_RATIO};"
             f"ideal_us={result['ideal_us_per_chunk']:.0f}")
+    printer(f"chunk_pipeline/megakernel_headline,"
+            f"{result['arms']['megakernel/none']['overhead_us_per_chunk']:.0f},"
+            f"overhead_ratio={mega_ratio:.3f};gate<={MEGA_GATE_RATIO};"
+            f"launches={result['arms']['megakernel/none']['megakernel_launches']}")
     assert ratio <= GATE_RATIO, (
         f"pipelined per-chunk overhead is {ratio:.2f}x the synchronous "
         f"(seed) path (gate: <= {GATE_RATIO}x): {json.dumps(result['arms'])}")
+    assert mega_ratio <= MEGA_GATE_RATIO, (
+        f"megakernel per-chunk overhead is {mega_ratio:.2f}x the synchronous "
+        f"(seed) path (gate: <= {MEGA_GATE_RATIO}x): "
+        f"{json.dumps(result['arms'])}")
     bad = [n for n, a in result["arms"].items() if not a["bit_identical"]]
     assert not bad, f"arms not bit-identical to the sync reference: {bad}"
     return result

@@ -187,6 +187,9 @@ def _clone_for_resume(task: Task, committed: Optional[Committed],
                  footprint=task.footprint, phase=task.phase,
                  sequence=task.sequence, tid=task.tid)
     clone.saved_context = committed
+    # per-task budget override survives the hop (a stale default budget on
+    # the destination shell would change chunk boundaries mid-task)
+    clone.chunk_budget = task.chunk_budget
     clone.t_arrived = task.t_arrived          # end-to-end turnaround
     clone.t_first_served = task.t_first_served
     clone.n_preemptions = task.n_preemptions

@@ -152,8 +152,9 @@ class ClusterNode:
         the bitstream generation entirely (the affinity router's signal)."""
         engine = self.shell.engine
         sig = task.args.signature()
-        return any(engine.cache_key(task.kernel, sig, g) in engine.cache
-                   for g in self.shell.geometries())
+        program = self.shell.prefetcher.program  # this shell's program kind
+        return any(engine.cache_key(task.kernel, sig, g, program)
+                   in engine.cache for g in self.shell.geometries())
 
     def submit(self, task: Task) -> TaskHandle:
         return self.scheduler.submit(task)

@@ -23,10 +23,12 @@ the TPU-idiomatic replacement for the FPGA's asynchronous per-RR reset).
 """
 from __future__ import annotations
 
+import ctypes
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.context import ContextRecord
 
@@ -117,6 +119,104 @@ def make_pipelined_chunk(kernel_fn: Callable):
         return ctx, state, done
 
     return chunk
+
+
+class PreemptFlag:
+    """Host-writable device flag the megakernel polls on-device
+    (DESIGN.md §10).
+
+    Value protocol: ``0`` = keep running; ``N >= 1`` = exit at the first
+    chunk boundary ``k >= N`` (``k`` counts chunks completed within the
+    current launch).  ``Region.request_preempt`` writes ``1`` — "the next
+    boundary" — while tests and the serving probe write an exact ``N`` for
+    deterministic boundary placement.
+
+    The flag lives in a one-element ``int32`` device buffer that is passed
+    to the compiled megakernel as a *non-donated* argument.  On this CPU
+    backend the buffer is host memory, so a host store is visible to the
+    running ``while_loop`` within one iteration — the zero-copy "device
+    put" the FPGA's AXI preempt line maps to.  ``np.asarray`` of a jax
+    array is zero-copy but read-only; the writable view is built over the
+    same bytes via ``unsafe_buffer_pointer`` (an aligned ``int32`` store
+    is atomic on every ISA the CPU backend targets, so the device-side
+    reader can never observe a torn value).
+    """
+
+    def __init__(self):
+        self._dev = jnp.zeros((1,), jnp.int32)
+        jax.block_until_ready(self._dev)
+        try:
+            ptr = self._dev.unsafe_buffer_pointer()
+        except Exception as e:  # pragma: no cover - non-CPU backends
+            raise RuntimeError(
+                "engine='megakernel' needs a host-mappable flag buffer "
+                "(jax CPU backend); use the pipelined engine here") from e
+        self._view = np.ctypeslib.as_array(
+            ctypes.cast(ptr, ctypes.POINTER(ctypes.c_int32)), shape=(1,))
+        self._view[0] = 0
+
+    @property
+    def device(self):
+        """The device array to pass as the megakernel's ``flag`` argument
+        (must never be donated — one buffer serves every launch)."""
+        return self._dev
+
+    def write(self, boundary: int):
+        self._view[0] = boundary
+
+    def read(self) -> int:
+        return int(self._view[0])
+
+    def clear(self):
+        self._view[0] = 0
+
+
+def make_megakernel(kernel_fn: Callable):
+    """The megakernel entry point (DESIGN.md §10):
+
+        mega(ctx, state, ints, floats, budget, flag)
+            -> (ctx, state, done, n_chunks)
+
+    The whole per-task chunk loop folded into ONE compiled dispatch: a
+    ``jax.lax.while_loop`` whose body is exactly the pipelined chunk body
+    (``kernel_fn(ctx.with_budget(budget), ...)``), so a launch costs one
+    host round trip regardless of how many chunks the budget slices the
+    kernel into.  Preemption stays bounded by one chunk: every iteration
+    re-reads ``flag`` (a host-writable one-element buffer) and the loop
+    exits at the first boundary ``k >= flag`` when ``flag != 0``.
+
+    The flag read is funnelled through ``optimization_barrier`` together
+    with the loop counter: without that data dependence XLA hoists the
+    read out of the loop as invariant and the device would never observe
+    a mid-flight host write.
+
+    ``done`` is an independent snapshot (same rule as
+    ``make_pipelined_chunk``): the worker polls it for completion after
+    ``ctx`` has been donated, and ``done == 0`` on exit is exactly "the
+    flag fired" — the partial context feeds the ContextBank commit path
+    bit-identically to a host-driven preemption at the same boundary.
+    ``n_chunks`` reports how many chunks actually ran.
+    """
+    def mega(ctx: ContextRecord, state, ints, floats, budget, flag):
+        def cond(carry):
+            c, _s, _k, stop = carry
+            return jnp.logical_and(c.done == 0, stop == 0)
+
+        def body(carry):
+            c, s, k, _ = carry
+            c, s = kernel_fn(c.with_budget(budget), s, ints, floats)
+            k = k + 1
+            f, _ = jax.lax.optimization_barrier((flag[0], k))
+            stop = jnp.where(jnp.logical_and(f != 0, k >= f),
+                             jnp.int32(1), jnp.int32(0))
+            return (c, s, k, stop)
+
+        ctx, state, k, _stop = jax.lax.while_loop(
+            cond, body, (ctx, state, jnp.int32(0), jnp.int32(0)))
+        done = jax.lax.optimization_barrier(ctx.done)
+        return ctx, state, done, k
+
+    return mega
 
 
 def run_to_completion(chunk_fn, ctx, state, ints, floats, budget: int,

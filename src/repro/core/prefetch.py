@@ -54,6 +54,10 @@ class BitstreamPrefetcher:
     def __init__(self, engine: ReconfigEngine, max_queue: int = 64,
                  auto_start: bool = True):
         self.engine = engine
+        # which program kind to warm ("chunk" | "mega"): the shell sets it
+        # from its engine mode so prefetched bitstreams hit the same cache
+        # entry its regions will load
+        self.program = "chunk"
         self.stats = PrefetcherStats()
         self._q: "queue.Queue[PrefetchRequest]" = queue.Queue(maxsize=max_queue)
         self._stop = threading.Event()
@@ -119,7 +123,8 @@ class BitstreamPrefetcher:
 
         try:
             self.engine.prefetch(req.kernel, req.bundle, req.geometry,
-                                 still_wanted=still_wanted)
+                                 still_wanted=still_wanted,
+                                 program=self.program)
         except Exception:  # pragma: no cover - a broken hint must not
             import traceback  # kill the prefetcher; the demand path will
 

@@ -168,8 +168,14 @@ class ReconfigEngine:
         self._lock = threading.Lock()  # stats + inflight table
         self._inflight: Dict[tuple, _Inflight] = {}
 
-    def cache_key(self, kernel: str, sig: tuple, geometry: tuple) -> tuple:
-        return (kernel, sig, geometry)
+    def cache_key(self, kernel: str, sig: tuple, geometry: tuple,
+                  program: str = "chunk") -> tuple:
+        """``program`` selects the compiled entry point: ``"chunk"`` (one
+        budget-bounded chunk per dispatch — the sync/pipelined engines) or
+        ``"mega"`` (the on-device while-loop over the same body — the
+        megakernel engine).  Same kernel + signature + geometry, distinct
+        bitstreams."""
+        return (kernel, sig, geometry, program)
 
     def _key_stats(self, key: tuple) -> KeyStats:
         # caller holds self._lock
@@ -180,13 +186,14 @@ class ReconfigEngine:
 
     # ------------------------------------------------------------------
     def load(self, kernel_name: str, bundle: ArgBundle, geometry: tuple,
-             devices=None) -> Tuple[Callable, float]:
+             devices=None, program: str = "chunk") -> Tuple[Callable, float]:
         """Partial reconfiguration of one region.  Returns (executable,
         seconds).  Only the bitstream *load* holds the ICAP lock; a cold
         compile (bitstream generation) runs outside it, so other regions'
         reconfigurations proceed meanwhile."""
         kd = get_kernel(kernel_name)
-        key = self.cache_key(kernel_name, bundle.signature(), geometry)
+        key = self.cache_key(kernel_name, bundle.signature(), geometry,
+                             program)
         t0 = time.perf_counter()
 
         entry = self.cache.get(key)
@@ -201,7 +208,8 @@ class ReconfigEngine:
         else:
             t_stall0 = time.perf_counter()
             entry = self._get_or_compile(key, kd, bundle, devices,
-                                         origin=ORIGIN_DEMAND)
+                                         origin=ORIGIN_DEMAND,
+                                         program=program)
             with self._lock:
                 self.stats.total_stall_s += time.perf_counter() - t_stall0
                 # joining an in-flight prefetch still absorbed the compile
@@ -219,7 +227,8 @@ class ReconfigEngine:
         return entry.fn, dt
 
     def _get_or_compile(self, key: tuple, kd: KernelDef, bundle: ArgBundle,
-                        devices, origin: str) -> CacheEntry:
+                        devices, origin: str,
+                        program: str = "chunk") -> CacheEntry:
         """Return the cached entry for ``key``, compiling it if needed.
         Concurrent requests for the same key are deduplicated: one thread
         compiles, the others wait on it (an 'inflight join')."""
@@ -244,7 +253,7 @@ class ReconfigEngine:
             return inflight.entry
 
         try:
-            fn = self._compile(kd, bundle, devices)
+            fn = self._compile(kd, bundle, devices, program)
             entry = CacheEntry(fn, origin=origin)
             evicted = self.cache.put(key, entry)
             with self._lock:
@@ -283,9 +292,10 @@ class ReconfigEngine:
             if len(self.key_stats) <= self._KEY_STATS_CAP:
                 break
 
-    def _compile(self, kd: KernelDef, bundle: ArgBundle, devices) -> Callable:
-        """AOT-compile the uniform *pipelined* chunk fn for this signature
-        (the bitstream-generation step).  The compiled executable is
+    def _compile(self, kd: KernelDef, bundle: ArgBundle, devices,
+                 program: str = "chunk") -> Callable:
+        """AOT-compile the uniform entry point for this signature (the
+        bitstream-generation step).  ``program="chunk"`` compiles
 
             chunk(ctx, bufs, ints, floats, budget) -> (ctx, bufs, done)
 
@@ -293,11 +303,23 @@ class ReconfigEngine:
         payload stay device-resident for the task's whole life on the
         region), ``budget`` a reusable non-donated scalar, and ``done`` an
         independent snapshot of the post-chunk flag that the worker can
-        poll after the context has been donated onward (DESIGN.md §8)."""
-        from repro.core.preemption import make_pipelined_chunk
+        poll after the context has been donated onward (DESIGN.md §8).
+        ``program="mega"`` compiles the on-device while-loop over the same
+        body (DESIGN.md §10),
 
+            mega(ctx, bufs, ints, floats, budget, flag)
+                -> (ctx, bufs, done, n_chunks)
+
+        whose extra non-donated ``flag`` argument is the host-writable
+        preempt buffer — one executable serves every region and launch."""
+        from repro.core.preemption import make_megakernel, make_pipelined_chunk
+
+        if program not in ("chunk", "mega"):
+            raise ValueError(f"unknown program kind {program!r}")
         t0 = time.perf_counter()
-        chunk = jax.jit(make_pipelined_chunk(kd.fn), donate_argnums=(0, 1))
+        builder = make_megakernel if program == "mega" else \
+            make_pipelined_chunk
+        entry = jax.jit(builder(kd.fn), donate_argnums=(0, 1))
         bufs, ints, floats = bundle.padded()
         ctx = ContextRecord.fresh(budget=kd.default_budget)
         abstract = lambda t: jax.tree.map(
@@ -306,8 +328,11 @@ class ReconfigEngine:
 
         bufs_a = tuple(abstract(jnp.asarray(b)) for b in bufs)
         budget_a = jax.ShapeDtypeStruct((), jnp.int32)
-        compiled = chunk.lower(abstract(ctx), bufs_a, abstract(ints),
-                               abstract(floats), budget_a).compile()
+        args = [abstract(ctx), bufs_a, abstract(ints), abstract(floats),
+                budget_a]
+        if program == "mega":
+            args.append(jax.ShapeDtypeStruct((1,), jnp.int32))
+        compiled = entry.lower(*args).compile()
         with self._lock:
             self.stats.total_compile_s += time.perf_counter() - t0
         return compiled
@@ -315,7 +340,8 @@ class ReconfigEngine:
     # ------------------------------------------------------------------
     def prefetch(self, kernel_name: str, bundle: ArgBundle, geometry: tuple,
                  still_wanted: Optional[Callable[[], bool]] = None,
-                 origin: str = ORIGIN_PREFETCH) -> str:
+                 origin: str = ORIGIN_PREFETCH,
+                 program: str = "chunk") -> str:
         """Generate a bitstream off the critical path (no ICAP involvement).
 
         Returns ``"cached"`` (already present or being generated),
@@ -323,7 +349,8 @@ class ReconfigEngine:
         prefetch is dropped, nothing compiled), or ``"compiled"``.
         """
         kd = get_kernel(kernel_name)
-        key = self.cache_key(kernel_name, bundle.signature(), geometry)
+        key = self.cache_key(kernel_name, bundle.signature(), geometry,
+                             program)
         if key in self.cache:
             return "cached"
         with self._lock:
@@ -333,15 +360,18 @@ class ReconfigEngine:
             with self._lock:
                 self.stats.prefetch_stale_drops += 1
             return "stale"
-        self._get_or_compile(key, kd, bundle, None, origin=origin)
+        self._get_or_compile(key, kd, bundle, None, origin=origin,
+                             program=program)
         return "compiled"
 
-    def prewarm(self, kernel_name: str, bundle: ArgBundle, geometry: tuple):
+    def prewarm(self, kernel_name: str, bundle: ArgBundle, geometry: tuple,
+                program: str = "chunk"):
         """Synchronous up-front warm (compile noise control in benches and
         tests).  Counts as a background compile, but its later demand hits
         are plain cache reuse — NOT prefetch wins — so prewarming a
         no-prefetch baseline cannot inflate the prefetch hit rate."""
-        self.prefetch(kernel_name, bundle, geometry, origin=ORIGIN_PREWARM)
+        self.prefetch(kernel_name, bundle, geometry, origin=ORIGIN_PREWARM,
+                      program=program)
 
     # ------------------------------------------------------------------
     def full_reconfigure(self) -> float:

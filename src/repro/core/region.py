@@ -10,16 +10,26 @@ Preemption is cooperative-chunked (DESIGN.md §2.1): the worker checks the
 preempt flag between chunks, saves the context+payload through the
 double-buffered bank, and raises a TASK_PREEMPTED interrupt.
 
-The execution hot path is *chunk-pipelined* (DESIGN.md §8): the worker
-issues chunk *k+1* while chunk *k*'s ``done`` flag is still resolving on
-the device, polling the flag's independent snapshot without ever blocking
-dispatch.  The chunk executable is done-gated to identity, so the one
-speculative chunk issued beyond completion (or past a preemption point)
-computes nothing and results stay bit-identical to the synchronous path.
-Context and payload buffers stay device-resident across chunks (donated
-chunk-to-chunk) and across preempt/resume on the same region; the host
-copy of a preemption commit is produced lazily, only when a checkpoint,
-migration, or cross-region resume actually needs host bytes.
+The region runs one of three engine modes (DESIGN.md §8/§10):
+
+- ``sync`` — one chunk per dispatch, blocking ``done`` read per chunk:
+  the bit-identity reference and the seed-equivalent baseline;
+- ``pipelined`` — the worker issues chunk *k+1* while chunk *k*'s ``done``
+  flag is still resolving on the device, polling the flag's independent
+  snapshot without ever blocking dispatch.  The chunk executable is
+  done-gated to identity, so the one speculative chunk issued beyond
+  completion (or past a preemption point) computes nothing and results
+  stay bit-identical to the synchronous path;
+- ``megakernel`` — the whole chunk loop is folded into the compiled
+  program (``jax.lax.while_loop``): a launch is ONE device dispatch
+  regardless of budget, and preemption rides a host-writable flag buffer
+  the device polls at every chunk boundary (``core/preemption.PreemptFlag``).
+
+In every mode, context and payload buffers stay device-resident across
+chunks (donated chunk-to-chunk) and across preempt/resume on the same
+region; the host copy of a preemption commit is produced lazily, only
+when a checkpoint, migration, or cross-region resume actually needs host
+bytes — a flag-exited megakernel feeds the exact same commit machinery.
 """
 from __future__ import annotations
 
@@ -38,13 +48,20 @@ import numpy as np
 from repro.controller.kernels import get_kernel
 from repro.core.context import ContextBank, ContextRecord, Committed
 from repro.core.interrupts import Event, EventKind, InterruptController
+from repro.core.preemption import PreemptFlag
 from repro.core.reconfig import ReconfigEngine
 from repro.core.task import Task, TaskStatus
 
-# host-side poll interval while the pipeline head resolves (the device is
-# busy with the speculative chunk during this wait, so the interval only
-# bounds preempt/failure response latency, not throughput)
-_POLL_S = 20e-6
+# host-side wait while a device flag snapshot resolves: bounded
+# exponential backoff instead of a fixed-interval busy-poll — a long
+# chunk no longer burns a host core, while the floor keeps short chunks
+# prompt.  The device is busy computing during this wait (speculative
+# chunk or in-flight megakernel), so the interval only bounds
+# preempt/failure *response* latency, never throughput.
+_POLL_MIN_S = 5e-6
+_POLL_MAX_S = 1e-3
+
+ENGINE_MODES = ("sync", "pipelined", "megakernel")
 
 
 def _device_clone(tree):
@@ -82,6 +99,9 @@ class RegionStats:
     chunks_pipelined: int = 0   # chunks issued while a predecessor resolved
     chunks_discarded: int = 0   # speculative identity chunks past done
     host_spills_avoided: int = 0  # device-resident resumes (no host copy)
+    # megakernel accounting (DESIGN.md §10)
+    megakernel_launches: int = 0  # single-dispatch launches
+    flag_poll_exits: int = 0      # launches the device exited on the flag
 
 
 class Region:
@@ -89,16 +109,31 @@ class Region:
                  interrupts: InterruptController,
                  devices=None, geometry: Tuple[int, ...] = (1,),
                  chunk_budget: Optional[int] = None,
-                 pipeline: bool = True):
+                 pipeline: bool = True,
+                 engine_mode: Optional[str] = None):
         self.rid = rid
         self.engine = engine
         self.interrupts = interrupts
         self.devices = devices
         self.geometry = geometry
         self.chunk_budget = chunk_budget
-        # chunk-pipelined dispatch (False = the synchronous reference path,
-        # used by the bit-identity tests and the per-chunk-overhead bench)
-        self.pipeline = pipeline
+        # execution engine mode: "sync" | "pipelined" | "megakernel"
+        # (``pipeline`` is the pre-megakernel boolean, kept as the default
+        # selector and as a readable attribute for existing callers)
+        mode = engine_mode or ("pipelined" if pipeline else "sync")
+        if mode not in ENGINE_MODES:
+            raise ValueError(f"unknown engine mode {mode!r}; "
+                             f"known: {ENGINE_MODES}")
+        self.engine_mode = mode
+        self.pipeline = mode == "pipelined"
+        # the megakernel's host-writable preempt flag (one per region —
+        # at most one launch is in flight on a region at a time)
+        self.flag: Optional[PreemptFlag] = (
+            PreemptFlag() if mode == "megakernel" else None)
+        # device budget scalars by value: a launch re-resolves the budget
+        # and re-uploads iff the value changed (the stale-budget fix —
+        # the scalar is cached by VALUE, never by task or launch)
+        self._budget_scalars: dict = {}
         self.bank = ContextBank()
         self.loaded: Optional[tuple] = None  # (kernel, sig) "bitstream id"
         self.executable = None
@@ -155,13 +190,23 @@ class Region:
 
     def request_preempt(self):
         self._preempt.set()
+        if self.flag is not None:
+            # zero-copy device put: the in-flight megakernel observes the
+            # store at its next chunk boundary and exits there
+            self.flag.write(1)
 
     def cancel_preempt(self):
         self._preempt.clear()
+        if self.flag is not None:
+            self.flag.clear()
 
     def inject_failure(self):
         """Kill this region (node failure simulation)."""
         self._failed.set()
+        if self.flag is not None:
+            # pop an in-flight megakernel promptly so the worker's wait
+            # resolves and the failure interrupt is raised within a chunk
+            self.flag.write(1)
 
     def begin_drain(self):
         """Elastic shrink step 1: stop accepting dispatches.  The caller
@@ -268,6 +313,11 @@ class Region:
         if self._failed.is_set():
             raise RegionFailure()
 
+    @property
+    def program(self) -> str:
+        """Which compiled entry point this region's mode needs."""
+        return "mega" if self.engine_mode == "megakernel" else "chunk"
+
     def _do_reconfig(self, task: Task):
         self._check_failure()
         key = (task.kernel, task.args.signature(), self.geometry)
@@ -275,7 +325,7 @@ class Region:
             return
         task.status = TaskStatus.RECONFIGURING
         fn, dt = self.engine.load(task.kernel, task.args, self.geometry,
-                                  self.devices)
+                                  self.devices, program=self.program)
         self.loaded = key
         self.executable = fn
         self.stats.reconfigs += 1
@@ -325,11 +375,74 @@ class Region:
         bufs_np, _, _ = task.args.padded()
         return ctx, tuple(jnp.asarray(b) for b in bufs_np)
 
+    # -- launch plumbing shared by every engine mode --------------------
+    def _budget_scalar(self, value: int):
+        """The non-donated device scalar for this launch's chunk budget,
+        cached BY VALUE: a task requeued with a different budget (e.g. a
+        ``task.chunk_budget`` override set after a preemption) always
+        resolves to a freshly uploaded scalar — the stale-budget fix —
+        while an unchanged value reuses the cached upload."""
+        arr = self._budget_scalars.get(value)
+        if arr is None:
+            arr = self._budget_scalars[value] = jnp.int32(value)
+        return arr
+
+    def _wait_ready(self, snapshot, abort_on_preempt: bool):
+        """Wait for a device flag snapshot with bounded exponential
+        backoff (``_POLL_MIN_S`` doubling to ``_POLL_MAX_S``): long chunks
+        no longer spin a host core at a fixed interval, short ones still
+        resolve promptly.  Returns early when the region fails — or, if
+        ``abort_on_preempt``, when a preempt request needs the host loop's
+        attention (the pipelined engine handles it between chunks; the
+        megakernel's preemption is device-side, so it keeps waiting)."""
+        delay = _POLL_MIN_S
+        while not snapshot.is_ready():
+            if self._failed.is_set():
+                return
+            if abort_on_preempt and self._preempt.is_set():
+                return
+            time.sleep(delay)
+            delay = min(delay * 2.0, _POLL_MAX_S)
+
+    def _commit_preempt(self, task: Task, ctx, bufs, t_busy0: float):
+        """Preemption tail, identical for every engine mode: lazy-spill
+        commit of the device-resident context + partial outputs, then the
+        TASK_PREEMPTED interrupt.  The committed host bytes are produced
+        on demand by whoever actually needs them."""
+        self.bank.commit(ctx, payload=bufs, tid=task.tid, device=True,
+                         region_rid=self.rid, owner=self)
+        task.saved_context = self.bank.restore()
+        task.status = TaskStatus.PREEMPTED
+        task.n_preemptions += 1
+        self.stats.preemptions += 1
+        self.current_task = None
+        self.stats.busy_s += time.perf_counter() - t_busy0
+        self.interrupts.raise_interrupt(Event(
+            EventKind.TASK_PREEMPTED, self.rid, task=task))
+
+    def _finish_done(self, task: Task, kd, bufs, t_busy0: float):
+        """Completion tail, identical for every engine mode."""
+        task.status = TaskStatus.DONE
+        task.t_done = time.perf_counter()
+        if kd.device_result:
+            # serving kernels: hand the final device buffers back as-is —
+            # the engine streams the token buffer host-side but threads the
+            # KV state into the next round without a host round trip
+            task.result = tuple(bufs)
+        else:
+            task.result = tuple(np.asarray(jax.device_get(b))
+                                for b in bufs[:2])
+        self.stats.kernels_run += 1
+        self.current_task = None
+        self.stats.busy_s += time.perf_counter() - t_busy0
+        self.interrupts.raise_interrupt(Event(
+            EventKind.TASK_DONE, self.rid, task=task))
+
     # -- the chunk-pipelined execution hot path -------------------------
     def _do_launch(self, task: Task):
         self._check_failure()
         kd = get_kernel(task.kernel)
-        budget = self.chunk_budget or kd.default_budget
+        budget = task.chunk_budget or self.chunk_budget or kd.default_budget
         _, ints, floats = task.args.padded()  # memoized device scalars
         ctx, bufs = self._prepare(task)
 
@@ -339,7 +452,10 @@ class Region:
             task.t_first_served = time.perf_counter()
         self.current_task = task
         t_busy0 = time.perf_counter()
-        budget_arr = jnp.int32(budget)  # non-donated: uploaded once per launch
+        budget_arr = self._budget_scalar(budget)
+        if self.engine_mode == "megakernel":
+            return self._launch_megakernel(task, kd, budget_arr, ints,
+                                           floats, ctx, bufs, t_busy0)
         depth = 1 if self.pipeline else 0
         pending: "deque" = deque()  # done snapshots of unretired chunks
         t_last = time.perf_counter()
@@ -388,20 +504,7 @@ class Region:
                 self._preempt.clear()
                 if drain():  # completion raced the preempt: task is done
                     break
-                # lazy spill: commit the device-resident context + partial
-                # outputs as-is (no host copy); the committed host bytes
-                # are produced on demand by whoever actually needs them
-                self.bank.commit(ctx, payload=bufs, tid=task.tid,
-                                 device=True, region_rid=self.rid,
-                                 owner=self)
-                task.saved_context = self.bank.restore()
-                task.status = TaskStatus.PREEMPTED
-                task.n_preemptions += 1
-                self.stats.preemptions += 1
-                self.current_task = None
-                self.stats.busy_s += time.perf_counter() - t_busy0
-                self.interrupts.raise_interrupt(Event(
-                    EventKind.TASK_PREEMPTED, self.rid, task=task))
+                self._commit_preempt(task, ctx, bufs, t_busy0)
                 return
 
             # keep the pipeline primed: the speculative chunk k+1 is issued
@@ -417,11 +520,7 @@ class Region:
             # Synchronous (depth 0): block on the flag directly, exactly
             # the seed's per-chunk host round trip.
             if depth:
-                head = pending[0]
-                while not head.is_ready():
-                    if self._preempt.is_set() or self._failed.is_set():
-                        break
-                    time.sleep(_POLL_S)
+                self._wait_ready(pending[0], abort_on_preempt=True)
                 if self._preempt.is_set() or self._failed.is_set():
                     continue  # handled at the loop top
 
@@ -432,21 +531,71 @@ class Region:
                 pending.clear()
                 break
 
-        task.status = TaskStatus.DONE
-        task.t_done = time.perf_counter()
-        if kd.device_result:
-            # serving kernels: hand the final device buffers back as-is —
-            # the engine streams the token buffer host-side but threads the
-            # KV state into the next round without a host round trip
-            task.result = tuple(bufs)
+        self._finish_done(task, kd, bufs, t_busy0)
+
+    # -- the megakernel execution hot path (DESIGN.md §10) ---------------
+    def _launch_megakernel(self, task: Task, kd, budget_arr, ints, floats,
+                           ctx, bufs, t_busy0: float):
+        """ONE device dispatch runs every remaining chunk: the compiled
+        ``while_loop`` re-reads the region's preempt flag at each chunk
+        boundary and exits there when it fires.  ``done == 0`` on return
+        is exactly "the flag fired mid-task" — the partial context feeds
+        the same commit path a host-driven preemption uses, bit-identically
+        to the sync/pipelined engines stopping at the same boundary."""
+        flag = self.flag
+        if self._preempt.is_set():
+            # parity with the pipelined loop-top check: a preempt request
+            # that lands before dispatch commits the prepared state as-is
+            # (zero chunks ran; resume restarts from the same boundary)
+            self._preempt.clear()
+            flag.clear()
+            self._commit_preempt(task, ctx, bufs, t_busy0)
+            return
+        arm = task.preempt_at_boundary
+        if arm is not None:
+            task.preempt_at_boundary = None  # one-shot: consumed at launch
+            flag.write(int(arm))
         else:
-            task.result = tuple(np.asarray(jax.device_get(b))
-                                for b in bufs[:2])
-        self.stats.kernels_run += 1
-        self.current_task = None
-        self.stats.busy_s += time.perf_counter() - t_busy0
-        self.interrupts.raise_interrupt(Event(
-            EventKind.TASK_DONE, self.rid, task=task))
+            # a stale flag value must not preempt this launch; re-assert
+            # after clearing in case request_preempt raced the clear (its
+            # event store precedes its flag store, so the recheck sees it)
+            flag.clear()
+            if self._preempt.is_set():
+                flag.write(1)
+        t0 = time.perf_counter()
+        ctx, bufs, done, n_chunks = self.executable(
+            ctx, bufs, ints, floats, budget_arr, flag.device)
+        self.stats.megakernel_launches += 1
+        # the whole loop is in flight on-device; the host only waits for
+        # the independent done snapshot.  A failure injected mid-flight
+        # pops the device loop via the flag so this wait stays bounded by
+        # one chunk, then surfaces through _check_failure below.
+        delay = _POLL_MIN_S
+        while not done.is_ready():
+            if self._failed.is_set() and flag.read() == 0:
+                flag.write(1)
+            time.sleep(delay)
+            delay = min(delay * 2.0, _POLL_MAX_S)
+        self._check_failure()
+        k = int(n_chunks)
+        dt = time.perf_counter() - t0
+        if k:
+            per = dt / k
+            a = 0.3
+            self.stats.chunk_ewma_s = (
+                per if self.stats.chunks == 0
+                else a * per + (1 - a) * self.stats.chunk_ewma_s)
+        self.stats.chunks += k
+        task.run_s += dt
+        if not int(done):
+            # the device exited on the flag at a chunk boundary
+            self.stats.flag_poll_exits += 1
+            self._preempt.clear()
+            flag.clear()
+            self._commit_preempt(task, ctx, bufs, t_busy0)
+            return
+        flag.clear()
+        self._finish_done(task, kd, bufs, t_busy0)
 
 
 class RegionFailure(Exception):

@@ -53,6 +53,8 @@ _SCHEDULER = {
     "chunks_pipelined": "chunks issued while a predecessor was resolving",
     "chunks_discarded": "speculative identity chunks past done",
     "host_spills_avoided": "device-resident resumes (no host round trip)",
+    "megakernel_launches": "single-dispatch megakernel launches",
+    "flag_poll_exits": "megakernel launches exited on the preempt flag",
     "coalesced_dispatches": "same-bitstream back-to-back dispatches",
     "reconfigs": "partial bitstream loads",
     "full_reconfigs": "full-fabric reconfigurations (baseline mode)",
@@ -133,6 +135,7 @@ _SERVING = {
     "decode_preemptions": "checkpoint-preemptions of decode rounds",
     "decode_migrations": "cross-region/shell moves of decode rounds",
     "state_device_rounds": "rounds whose KV state stayed device-resident",
+    "engine_mode": "region engine the backend shell runs (None = cluster)",
 }
 
 SCHEMA: Dict[str, Dict[str, str]] = {

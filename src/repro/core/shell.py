@@ -40,7 +40,8 @@ class Shell:
                  prefetch: bool = True,
                  prefetch_max_queue: int = 64,
                  region_widths: Optional[Sequence[int]] = None,
-                 pipeline: bool = True):
+                 pipeline: bool = True,
+                 engine: Optional[str] = None):
         self.devices = list(devices if devices is not None else jax.devices())
         self.interrupts = InterruptController()
         self.engine = ReconfigEngine(simulate_partial_s=simulate_partial_s,
@@ -51,9 +52,15 @@ class Shell:
             self.engine, max_queue=prefetch_max_queue, auto_start=False)
         self.prefetch_enabled = prefetch
         self.chunk_budget = chunk_budget
-        # chunk-pipelined region dispatch (DESIGN.md §8); False forces the
-        # synchronous reference path on every region (bench baseline arm)
-        self.pipeline = pipeline
+        # region execution engine mode (DESIGN.md §8/§10): "sync" |
+        # "pipelined" | "megakernel".  ``engine`` wins when given; the
+        # ``pipeline`` boolean is the pre-megakernel selector, kept for
+        # existing callers (False forces the synchronous reference path)
+        self.engine_mode = engine or ("pipelined" if pipeline else "sync")
+        self.pipeline = self.engine_mode == "pipelined"
+        # megakernel regions need the "mega" program kind prefetched/compiled
+        self.prefetcher.program = (
+            "mega" if self.engine_mode == "megakernel" else "chunk")
         # test/bench hook inherited by regions added later (elastic grow)
         self.region_slowdown_s: float = 0.0
         self.floorplanner = Floorplanner(self.devices,
@@ -79,7 +86,8 @@ class Shell:
         self._next_rid += 1
         r = Region(rid, self.engine, self.interrupts,
                    devices=list(devices), geometry=(len(devices),),
-                   chunk_budget=self.chunk_budget, pipeline=self.pipeline)
+                   chunk_budget=self.chunk_budget,
+                   engine_mode=self.engine_mode)
         r.slowdown_s = self.region_slowdown_s
         self.floorplanner.bind(rid, devices)
         self.regions.append(r)
@@ -156,7 +164,9 @@ class Shell:
                     "chunks": r.stats.chunks,
                     "chunks_pipelined": r.stats.chunks_pipelined,
                     "chunks_discarded": r.stats.chunks_discarded,
-                    "host_spills_avoided": r.stats.host_spills_avoided}
+                    "host_spills_avoided": r.stats.host_spills_avoided,
+                    "megakernel_launches": r.stats.megakernel_launches,
+                    "flag_poll_exits": r.stats.flag_poll_exits}
             for r in self.regions
         }
         return stamp("shell_reconfig", rep)

@@ -55,6 +55,17 @@ class Task:
     # Pins are shell-local (rids), so they do NOT survive cross-shell
     # migration — the cluster clone drops them.
     region_pin: Optional[frozenset] = None
+    # per-task chunk-budget override (None = region/kernel default).  The
+    # region resolves it freshly at EVERY launch and uploads the scalar by
+    # value, so a task requeued with a different remaining budget after a
+    # preemption provably re-uploads — never reuses a stale scalar.
+    chunk_budget: Optional[int] = None
+    # deterministic preemption hook for the megakernel engine (tests, the
+    # serving preempt probe, the overhead bench): the next megakernel
+    # launch of this task writes this value into its preempt flag before
+    # dispatch — the device exits at exactly this chunk boundary — and
+    # clears the field (one-shot).  Ignored by the sync/pipelined engines.
+    preempt_at_boundary: Optional[int] = None
     # the Sequence this task serves, if any (serving engine back-reference;
     # opaque to the scheduler)
     sequence: Any = None

@@ -113,7 +113,8 @@ def serve_task_stream(*, n_tasks: int = 16, n_regions: int = 2,
                       tenants: int = 1, burst: int = 1,
                       autoscale: bool = False, min_regions: int = 1,
                       max_regions: int = 3, metrics_out: str = None,
-                      cache_capacity: int = None, quiet: bool = False) -> dict:
+                      cache_capacity: int = None, quiet: bool = False,
+                      engine: str = "pipelined") -> dict:
     """Serve a random blur-task stream through the preemptive scheduler and
     return its report, including the async-reconfiguration statistics.
 
@@ -169,13 +170,14 @@ def serve_task_stream(*, n_tasks: int = 16, n_regions: int = 2,
     pool = None
     if autoscale:
         shell = Shell(n_regions=min_regions, chunk_budget=2,
-                      prefetch=prefetch, cache_capacity=cache_capacity)
+                      prefetch=prefetch, cache_capacity=cache_capacity,
+                      engine=engine)
         pool = RegionPool(shell, autoscaler=Autoscaler(AutoscalerConfig(
             min_regions=min_regions, max_regions=max_regions,
             grow_queue_depth=1.5, cooldown_s=0.3, idle_grace_s=0.4)))
     else:
         shell = Shell(n_regions=n_regions, chunk_budget=2, prefetch=prefetch,
-                      cache_capacity=cache_capacity)
+                      cache_capacity=cache_capacity, engine=engine)
     sched = Scheduler(shell, SchedulerConfig(policy=policy), pool=pool)
 
     if not open_loop:
@@ -190,7 +192,8 @@ def serve_task_stream(*, n_tasks: int = 16, n_regions: int = 2,
             if ex is None:
                 continue
             for geom in shell.geometries():
-                shell.engine.prewarm(kname, ex.args, geom)
+                shell.engine.prewarm(kname, ex.args, geom,
+                                     program=shell.prefetcher.program)
 
         shell.region_slowdown_s = 0.02  # deterministic per-chunk work:
         for r in shell.regions:        # fairness and turnaround measure
@@ -261,7 +264,7 @@ def serve_cluster(*, n_shells: int = 2, regions_per_shell: int = 1,
                   rebalance: bool = True, force_migrations: int = 0,
                   fail_shell: int = None, fail_after: int = None,
                   prefetch: bool = True, metrics_out: str = None,
-                  quiet: bool = False) -> dict:
+                  quiet: bool = False, engine: str = "pipelined") -> dict:
     """Serve a bursty open-loop blur stream through a multi-shell cluster
     (DESIGN.md §7) and return the aggregated ``ClusterFrontend.report()``.
 
@@ -297,7 +300,7 @@ def serve_cluster(*, n_shells: int = 2, regions_per_shell: int = 1,
                          regions_per_shell=regions_per_shell,
                          router=router, rebalance=rebalance,
                          config=SchedulerConfig(policy=policy),
-                         chunk_budget=2, prefetch=prefetch)
+                         chunk_budget=2, prefetch=prefetch, engine=engine)
     for node in fe.nodes:
         # deterministic per-chunk work (see serve_task_stream) + warm
         # bitstreams so the trace measures the fabric, not XLA compiles
@@ -307,7 +310,9 @@ def serve_cluster(*, n_shells: int = 2, regions_per_shell: int = 1,
         for kname in kernels:
             ex = next(t for t in tasks if t.kernel == kname)
             for geom in node.shell.geometries():
-                node.shell.engine.prewarm(kname, ex.args, geom)
+                node.shell.engine.prewarm(
+                    kname, ex.args, geom,
+                    program=node.shell.prefetcher.program)
 
     if fail_after is None:
         fail_after = n_tasks // 2
@@ -365,7 +370,8 @@ def serve_decode(*, n_sequences: int = 6, prompt_len: int = 12,
                  d_model: int = 384, vocab: int = 51865, n_regions: int = 2,
                  disaggregate: bool = True, preempt_every: int = 0,
                  partial_s: float = 0.0, seed: int = 0, verify: bool = True,
-                 metrics_out: str = None, quiet: bool = False) -> dict:
+                 metrics_out: str = None, quiet: bool = False,
+                 engine: str = "pipelined") -> dict:
     """Token-serving driver (DESIGN.md §9): submit ``n_sequences``
     generation requests through the continuous-batching ``ServingEngine``
     over a preemptive scheduler, verify every streamed sequence against
@@ -393,8 +399,11 @@ def serve_decode(*, n_sequences: int = 6, prompt_len: int = 12,
     # slowdown hook the straggler tests use)
     shell = Shell(n_regions=n_regions,
                   chunk_budget=1 if preempt_every else 2,
-                  simulate_partial_s=partial_s)
-    if preempt_every:
+                  simulate_partial_s=partial_s, engine=engine)
+    if preempt_every and engine != "megakernel":
+        # stretch chunks so the probe thread lands mid-round; megakernel
+        # probes arm the deterministic flag write instead (no timing race,
+        # and slowdown_s has no effect inside a single-dispatch launch)
         for r in shell.regions:
             r.slowdown_s = 0.02
     sched = Scheduler(shell, SchedulerConfig())
@@ -519,6 +528,13 @@ def main(argv=None):
                                help="submit N tasks back-to-back per "
                                     "arrival gap (bursty trace)")
     stream_common.add_argument("--no-prefetch", action="store_true")
+    stream_common.add_argument("--engine",
+                               choices=("sync", "pipelined", "megakernel"),
+                               default="pipelined",
+                               help="region execution engine (DESIGN.md "
+                                    "§8/§10): per-chunk sync reference, "
+                                    "chunk-pipelined dispatch, or the "
+                                    "single-dispatch megakernel")
 
     ap = argparse.ArgumentParser(prog="serve")
     sub = ap.add_subparsers(dest="cmd", required=True)
@@ -592,6 +608,10 @@ def main(argv=None):
                     help="simulated partial-reconfiguration latency")
     dc.add_argument("--no-verify", action="store_true",
                     help="skip the per-sequence oracle bit-identity check")
+    dc.add_argument("--engine",
+                    choices=("sync", "pipelined", "megakernel"),
+                    default="pipelined",
+                    help="region execution engine for serving rounds")
 
     args = ap.parse_args(argv)
     if args.cmd == "cluster":
@@ -605,7 +625,8 @@ def main(argv=None):
                       fail_shell=args.fail_shell,
                       fail_after=args.fail_after,
                       prefetch=not args.no_prefetch,
-                      metrics_out=args.metrics_out, quiet=args.quiet)
+                      metrics_out=args.metrics_out, quiet=args.quiet,
+                      engine=args.engine)
     elif args.cmd == "scheduler":
         serve_task_stream(n_tasks=args.n_tasks, n_regions=args.regions,
                           seed=args.seed,
@@ -618,7 +639,7 @@ def main(argv=None):
                           max_regions=args.max_regions,
                           metrics_out=args.metrics_out,
                           cache_capacity=args.cache_capacity,
-                          quiet=args.quiet)
+                          quiet=args.quiet, engine=args.engine)
     elif args.cmd == "decode":
         serve_decode(n_sequences=args.sequences, prompt_len=args.prompt_len,
                      max_new=args.max_new, slots=args.slots,
@@ -628,7 +649,8 @@ def main(argv=None):
                      preempt_every=args.preempt_every,
                      partial_s=args.partial_s, seed=args.seed,
                      verify=not args.no_verify,
-                     metrics_out=args.metrics_out, quiet=args.quiet)
+                     metrics_out=args.metrics_out, quiet=args.quiet,
+                     engine=args.engine)
     else:
         cfg = get_config(args.arch)
         if args.reduced:

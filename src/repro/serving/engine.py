@@ -422,6 +422,12 @@ class ServingEngine:
         if shell is None:
             return
         self._rounds_since_probe = 0
+        if getattr(shell, "engine_mode", None) == "megakernel":
+            # megakernel rounds are single dispatches with no host chunk
+            # boundary to race: arm the deterministic one-shot flag write
+            # instead — the device exits at the first chunk boundary
+            task.preempt_at_boundary = 1
+            return
 
         def probe():
             deadline = time.perf_counter() + 5.0
@@ -518,4 +524,6 @@ class ServingEngine:
                 "decode_preemptions": st.decode_preemptions,
                 "decode_migrations": st.decode_migrations,
                 "state_device_rounds": st.state_device_rounds,
+                "engine_mode": getattr(getattr(self.backend, "shell", None),
+                                       "engine_mode", None),
             })

@@ -1,0 +1,395 @@
+"""Megakernel region engine (DESIGN.md §10): one device dispatch per
+launch, device-polled preemption via the host-writable flag buffer.
+
+Covers: single-dispatch bit-identity against both the sync and pipelined
+engines; flag-forced preemption at EVERY chunk boundary with same-region
+(device-resident) resume, cross-region (host materialize) resume, and
+cross-shell checkpoint migration; a hypothesis property over
+(budget, preempt_at) pairs; the stale-budget re-upload regression; the
+bounded-exponential-backoff wait; and the scheduler/shell report counters.
+"""
+import time
+
+import numpy as np
+import pytest
+
+try:  # property tests degrade to deterministic variants without the dep
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal containers
+    HAVE_HYPOTHESIS = False
+
+from repro.controller.kernels import get_kernel
+from repro.core.interrupts import EventKind
+from repro.core.region import _POLL_MAX_S, _POLL_MIN_S
+from repro.core.scheduler import Scheduler, SchedulerConfig
+from repro.core.shell import Shell
+from repro.core.task import Task, TaskStatus
+from repro.kernels.blur.tasks import make_image
+
+SIZE = 30
+
+
+def _blur_task(rng, iters=2, kernel="MedianBlur", img=None):
+    if img is None:
+        img = make_image(rng, SIZE)
+    kd = get_kernel(kernel)
+    t = Task(kernel=kernel,
+             args=kd.bundle(img, np.zeros_like(img), H=SIZE, W=SIZE,
+                            iters=iters))
+    return t, img
+
+
+def _drive(shell, task, arm=None, rearm=False, resume_region=None,
+           timeout=60.0):
+    """Drive one task on region 0.  ``arm`` writes the one-shot
+    ``preempt_at_boundary`` flag before (each, if ``rearm``) launch — the
+    deterministic megakernel preemption hook; sync/pipelined engines
+    ignore it, so the same driver produces uninterrupted reference runs.
+    Returns the preemption count."""
+    regions = shell.regions
+    target = regions[0]
+    target.enqueue_reconfig(task)
+    if arm is not None:
+        task.preempt_at_boundary = arm
+    target.enqueue_launch(task)
+    preemptions = 0
+    deadline = time.perf_counter() + timeout
+    while True:
+        assert time.perf_counter() < deadline, f"stuck: {task}"
+        ev = shell.interrupts.wait(0.0005)
+        if ev is None:
+            continue
+        if ev.kind is EventKind.TASK_DONE:
+            break
+        if ev.kind is EventKind.TASK_PREEMPTED:
+            preemptions += 1
+            target.cancel_preempt()
+            target = resume_region if resume_region is not None else target
+            target.enqueue_reconfig(task)
+            if rearm and arm is not None:
+                task.preempt_at_boundary = arm
+            target.enqueue_launch(task)
+    for r in regions:
+        r.cancel_preempt()
+    return preemptions
+
+
+def _reference(img, iters, budget=2):
+    """Uninterrupted synchronous run: the bit-identity reference, plus its
+    chunk count (the megakernel must execute exactly as many)."""
+    shell = Shell(n_regions=1, chunk_budget=budget, engine="sync",
+                  prefetch=False)
+    try:
+        t, _ = _blur_task(np.random.default_rng(0), iters=iters, img=img)
+        _drive(shell, t)
+        return (tuple(np.asarray(b) for b in t.result),
+                shell.regions[0].stats.chunks)
+    finally:
+        shell.shutdown()
+
+
+# ---------------------------------------------------------- single dispatch
+def test_megakernel_single_dispatch_bit_identity():
+    """An unpreempted launch is ONE dispatch regardless of budget, runs
+    exactly the sync engine's chunk count on-device, and its output is
+    bit-identical to both reference engines."""
+    rng = np.random.default_rng(7)
+    img = make_image(rng, SIZE)
+    ref, n_chunks = _reference(img, iters=2)
+
+    pipe = Shell(n_regions=1, chunk_budget=2, engine="pipelined",
+                 prefetch=False)
+    try:
+        tp, _ = _blur_task(rng, iters=2, img=img)
+        _drive(pipe, tp)
+        assert all(np.array_equal(a, b) for a, b in zip(tp.result, ref))
+    finally:
+        pipe.shutdown()
+
+    shell = Shell(n_regions=1, chunk_budget=2, engine="megakernel",
+                  prefetch=False)
+    try:
+        t, _ = _blur_task(rng, iters=2, img=img)
+        _drive(shell, t)
+        r = shell.regions[0]
+        assert r.stats.megakernel_launches == 1
+        assert r.stats.flag_poll_exits == 0
+        assert r.stats.chunks == n_chunks
+        assert all(np.array_equal(a, b) for a, b in zip(t.result, ref))
+        assert all(np.array_equal(a, b) for a, b in zip(t.result, tp.result))
+    finally:
+        shell.shutdown()
+
+
+def test_engine_mode_validation():
+    with pytest.raises(ValueError, match="unknown engine mode"):
+        Shell(n_regions=1, engine="warp-drive", prefetch=False)
+
+
+# ----------------------------------------------------- flag-timing coverage
+def test_flag_at_every_boundary_same_region():
+    """Arming the flag at boundary 1 of every launch preempts at EVERY
+    chunk boundary; each resume is device-resident (no host spill) and the
+    final output is bit-identical to the uninterrupted sync run."""
+    rng = np.random.default_rng(8)
+    img = make_image(rng, SIZE)
+    ref, n_chunks = _reference(img, iters=2)
+    assert n_chunks >= 3
+    shell = Shell(n_regions=1, chunk_budget=2, engine="megakernel",
+                  prefetch=False)
+    try:
+        t, _ = _blur_task(rng, iters=2, img=img)
+        pre = _drive(shell, t, arm=1, rearm=True)
+        r = shell.regions[0]
+        assert pre == n_chunks - 1
+        assert r.stats.flag_poll_exits == pre
+        assert r.stats.megakernel_launches == n_chunks  # one chunk each
+        assert r.stats.chunks == n_chunks
+        assert r.stats.host_spills_avoided == pre  # device-resident resumes
+        assert all(np.array_equal(a, b) for a, b in zip(t.result, ref))
+    finally:
+        shell.shutdown()
+
+
+def test_flag_exit_cross_region_materialize():
+    """Flag-exited context resumed on a DIFFERENT region: the lazy commit
+    must materialize through the host, bit-identically."""
+    rng = np.random.default_rng(9)
+    img = make_image(rng, SIZE)
+    ref, n_chunks = _reference(img, iters=3)
+    for k in range(1, n_chunks):
+        shell = Shell(n_regions=2, chunk_budget=2, engine="megakernel",
+                      prefetch=False)
+        try:
+            t, _ = _blur_task(rng, iters=3, img=img)
+            pre = _drive(shell, t, arm=k, resume_region=shell.regions[1])
+            assert pre == 1
+            assert shell.regions[0].stats.chunks == k  # exact boundary
+            assert shell.regions[0].stats.flag_poll_exits == 1
+            assert shell.regions[1].stats.host_spills_avoided == 0
+            assert all(np.array_equal(a, b)
+                       for a, b in zip(t.result, ref)), f"boundary {k}"
+        finally:
+            shell.shutdown()
+
+
+def test_flag_exit_cross_shell_migration():
+    """A RUNNING megakernel launch checkpoint-migrates across shells: the
+    frontend's handoff preempts it via the flag (within one chunk), the
+    commit spills through the checksummed checkpoint, and the resumed run
+    finishes bit-identically."""
+    from repro.cluster import ClusterFrontend
+
+    size, iters = 64, 48  # ~192 chunks at budget 1: a wide RUNNING window
+    rng = np.random.default_rng(11)
+    img = make_image(rng, size)
+    kd = get_kernel("MedianBlur")
+
+    def mk():
+        return Task(kernel="MedianBlur",
+                    args=kd.bundle(img, np.zeros_like(img), H=size, W=size,
+                                   iters=iters))
+
+    ref_shell = Shell(n_regions=1, chunk_budget=1, engine="sync",
+                      prefetch=False)
+    try:
+        t_ref = mk()
+        _drive(ref_shell, t_ref)
+        ref = tuple(np.asarray(b) for b in t_ref.result)
+    finally:
+        ref_shell.shutdown()
+
+    fe = ClusterFrontend(n_shells=2, regions_per_shell=1, chunk_budget=1,
+                         rebalance=False, engine="megakernel")
+    try:
+        for node in fe.nodes:  # both shells warm: the migration window is
+            node.shell.engine.prewarm(  # the launch, not an XLA compile
+                "MedianBlur", t_ref.args, (1,), program="mega")
+        t = mk()
+        h = fe.submit(t)
+        deadline = time.perf_counter() + 30.0
+        migrated = False
+        while time.perf_counter() < deadline and not migrated:
+            if t.status is TaskStatus.RUNNING and fe.migrate(tid=t.tid):
+                migrated = True
+                break
+            time.sleep(0.001)
+        assert migrated, "forced migration never completed"
+        out = h.result(timeout=60.0)
+        assert h.n_migrations == 1
+        assert all(np.array_equal(a, b) for a, b in zip(out, ref))
+        exits = sum(n.shell.regions[0].stats.flag_poll_exits
+                    for n in fe.nodes)
+        assert exits >= 1  # the handoff popped the in-flight megakernel
+    finally:
+        rep = fe.shutdown()
+    assert rep["stranded_handles"] == 0 and rep["lost_tasks"] == 0
+
+
+# ------------------------------------------------- (budget, preempt_at) prop
+@pytest.fixture(scope="module")
+def prop_shells():
+    """One sync + one megakernel shell shared across property examples so
+    each distinct signature compiles once per engine.  Budgets vary via
+    the per-task ``chunk_budget`` override (itself under test)."""
+    sync = Shell(n_regions=1, chunk_budget=2, engine="sync", prefetch=False)
+    mega = Shell(n_regions=1, chunk_budget=2, engine="megakernel",
+                 prefetch=False)
+    yield sync, mega
+    sync.shutdown()
+    mega.shutdown()
+
+
+def _check_property(prop_shells, budget, preempt_at, iters, seed):
+    sync, mega = prop_shells
+    rng = np.random.default_rng(seed)
+    img = make_image(rng, SIZE)
+    t_ref, _ = _blur_task(rng, iters=iters, img=img)
+    t_ref.chunk_budget = budget
+    _drive(sync, t_ref)
+    t, _ = _blur_task(rng, iters=iters, img=img)
+    t.chunk_budget = budget
+    _drive(mega, t, arm=preempt_at, rearm=True)
+    assert all(np.array_equal(a, b) for a, b in zip(t.result, t_ref.result))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=6, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(budget=st.integers(1, 4), preempt_at=st.integers(1, 8),
+           iters=st.integers(1, 3), seed=st.integers(0, 3))
+    def test_property_budget_preempt_bit_identity(prop_shells, budget,
+                                                  preempt_at, iters, seed):
+        """For any (budget, preempt boundary): flag-preempting a megakernel
+        at that boundary on every launch never changes the output."""
+        _check_property(prop_shells, budget, preempt_at, iters, seed)
+else:  # deterministic fallback over the same corners
+    @pytest.mark.parametrize("budget,preempt_at,iters,seed", [
+        (1, 1, 1, 0), (1, 3, 2, 1), (2, 1, 2, 2), (3, 2, 3, 3),
+        (4, 8, 1, 0), (2, 5, 3, 1),
+    ])
+    def test_property_budget_preempt_bit_identity(prop_shells, budget,
+                                                  preempt_at, iters, seed):
+        _check_property(prop_shells, budget, preempt_at, iters, seed)
+
+
+# --------------------------------------------------- stale-budget regression
+def _mega_resume_chunks(resume_budget):
+    """Preempt a budget-4 megakernel launch at its first boundary,
+    override the task budget, resume to completion.  Returns
+    (first-launch chunks, resumed chunks, result)."""
+    shell = Shell(n_regions=1, chunk_budget=4, engine="megakernel",
+                  prefetch=False)
+    try:
+        t, img = _blur_task(np.random.default_rng(3), iters=2)
+        r = shell.regions[0]
+        r.enqueue_reconfig(t)
+        t.preempt_at_boundary = 1
+        r.enqueue_launch(t)
+        deadline = time.perf_counter() + 60.0
+        while t.status is not TaskStatus.PREEMPTED:
+            assert time.perf_counter() < deadline
+            time.sleep(0.0005)
+        first = r.stats.chunks
+        t.chunk_budget = resume_budget
+        r.cancel_preempt()
+        r.enqueue_launch(t)
+        while t.status is not TaskStatus.DONE:
+            assert time.perf_counter() < deadline
+            time.sleep(0.0005)
+        if resume_budget is not None:
+            # the override's scalar was actually uploaded (cached by VALUE)
+            assert resume_budget in r._budget_scalars
+            assert int(r._budget_scalars[resume_budget]) == resume_budget
+        return first, r.stats.chunks - first, \
+            tuple(np.asarray(b) for b in t.result), img
+    finally:
+        shell.shutdown()
+
+
+def test_stale_budget_reuploads_on_resume():
+    """Regression: a task requeued with a SMALLER budget after preemption
+    must re-upload the budget scalar — the resumed launch runs more,
+    smaller chunks, and the result stays bit-identical."""
+    first_a, resumed_default, out_default, img = _mega_resume_chunks(None)
+    first_b, resumed_small, out_small, _ = _mega_resume_chunks(1)
+    assert first_a == first_b == 1  # deterministic boundary placement
+    # a stale budget-4 scalar would make these equal
+    assert resumed_small > resumed_default
+    ref, _ = _reference(img, iters=2)
+    assert all(np.array_equal(a, b) for a, b in zip(out_default, ref))
+    assert all(np.array_equal(a, b) for a, b in zip(out_small, ref))
+
+
+def test_task_budget_override_sync_engine():
+    """``task.chunk_budget`` is resolved freshly per launch on every
+    engine, not just the megakernel."""
+    rng = np.random.default_rng(4)
+    img = make_image(rng, SIZE)
+    counts = {}
+    for budget in (None, 1):
+        shell = Shell(n_regions=1, chunk_budget=4, engine="sync",
+                      prefetch=False)
+        try:
+            t, _ = _blur_task(rng, iters=2, img=img)
+            t.chunk_budget = budget
+            _drive(shell, t)
+            counts[budget] = shell.regions[0].stats.chunks
+        finally:
+            shell.shutdown()
+    assert counts[1] > counts[None]
+
+
+# ------------------------------------------------------------ backoff wait
+def test_wait_ready_exponential_backoff(monkeypatch):
+    """The snapshot wait starts at the floor, doubles per wakeup, and
+    saturates at the cap (no fixed-interval core burn on long chunks)."""
+    import repro.core.region as region_mod
+
+    shell = Shell(n_regions=1, engine="sync", prefetch=False)
+    try:
+        delays = []
+        monkeypatch.setattr(region_mod.time, "sleep",
+                            lambda s: delays.append(s))
+
+        class Snap:
+            def __init__(self, n):
+                self.n = n
+
+            def is_ready(self):
+                self.n -= 1
+                return self.n < 0
+
+        shell.regions[0]._wait_ready(Snap(12), abort_on_preempt=False)
+        assert delays[0] == pytest.approx(_POLL_MIN_S)
+        for a, b in zip(delays, delays[1:]):
+            assert b == pytest.approx(min(a * 2.0, _POLL_MAX_S))
+        assert max(delays) <= _POLL_MAX_S
+        assert delays[-1] == pytest.approx(_POLL_MAX_S)
+    finally:
+        shell.shutdown()
+
+
+# --------------------------------------------------------- report counters
+def test_scheduler_report_counters_and_schema():
+    from repro.core.reporting import SCHEMA
+
+    rng = np.random.default_rng(5)
+    shell = Shell(n_regions=1, chunk_budget=2, engine="megakernel",
+                  prefetch=False)
+    sched = Scheduler(shell, SchedulerConfig())
+    tasks = []
+    for _ in range(2):
+        t, _ = _blur_task(rng, iters=1)
+        tasks.append(t)
+    rep = sched.run(tasks, quiet=True)
+    shell.shutdown()
+    assert rep["megakernel_launches"] >= 2
+    assert rep["flag_poll_exits"] == 0
+    unknown = set(rep) - set(SCHEMA["scheduler"])
+    assert not unknown, f"undocumented scheduler report keys: {unknown}"
+    shell_rep = shell.reconfig_report()
+    for r in shell_rep["regions"].values():
+        assert "megakernel_launches" in r and "flag_poll_exits" in r

@@ -160,8 +160,8 @@ def test_inflight_compile_dedup(rng):
     import time
 
     eng = ReconfigEngine()
-    eng._compile = lambda kd, bundle, devices: (time.sleep(0.3),
-                                                lambda *a: None)[1]
+    eng._compile = lambda kd, bundle, devices, program: (time.sleep(0.3),
+                                                         lambda *a: None)[1]
     bundle = _bundle(rng)
     errs = []
 
