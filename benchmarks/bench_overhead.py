@@ -124,7 +124,8 @@ def run_seed_arm(preempt_every: int = 0, *, size: int = 64, iters: int = 48,
 
 def run_pipeline_arm(pipeline: bool, preempt_every: int = 0, *,
                      engine: str = None, migrate: bool = False,
-                     size: int = 64, iters: int = 48, seed: int = 5) -> dict:
+                     size: int = 64, iters: int = 48, seed: int = 5,
+                     tracer=None) -> dict:
     """One microbench arm: a single MedianBlur task driven chunk by chunk
     on a region (budget 1 → one row block per chunk), with optional forced
     preemption every ``preempt_every`` chunks, resuming on the *other*
@@ -145,7 +146,7 @@ def run_pipeline_arm(pipeline: bool, preempt_every: int = 0, *,
     task, bundle = _pipeline_task(seed, size, iters)
     n_regions = 2 if migrate else 1
     shell = Shell(n_regions=n_regions, chunk_budget=1, engine=engine,
-                  prefetch=False)
+                  prefetch=False, tracer=tracer)
     try:
         for r in shell.regions:  # bitstreams warm: measure dispatch, not
             shell.engine.prewarm("MedianBlur", bundle, r.geometry,  # compile
@@ -376,4 +377,84 @@ def measure_chunk_pipeline(printer=print,
         f"{json.dumps(result['arms'])}")
     bad = [n for n, a in result["arms"].items() if not a["bit_identical"]]
     assert not bad, f"arms not bit-identical to the sync reference: {bad}"
+    return result
+
+
+# ------------------------------------------------- tracer overhead (§11)
+TRACER_GATE_DELTA = 0.02   # traced/untraced per-chunk wall: <= +2% ...
+TRACER_ABS_FLOOR_US = 2.0  # ... or <= 2us/chunk absolute (noise floor for
+#                            arms whose per-chunk wall is already tiny)
+
+
+def measure_tracer_overhead(printer=print,
+                            cache_path: str = "bench_tracer_overhead.json",
+                            use_cache: bool = True, repeats: int = 5,
+                            size: int = 64, iters: int = 48) -> dict:
+    """The flight recorder's dispatch-path cost (DESIGN.md §11): the
+    pipelined chunk microbench run untraced vs traced (fresh ``Tracer``
+    per repeat, so every chunk/dispatch/run event is really recorded),
+    at zero and heavy preemption rates.
+
+    The gate — enforced here and in CI — requires the traced arm's
+    per-chunk wall time within ``TRACER_GATE_DELTA`` (2%) of the untraced
+    arm's, or within ``TRACER_ABS_FLOOR_US`` absolute: one deque append
+    under an uncontended lock must stay invisible next to a ~100us chunk
+    dispatch.  Min-of-repeats on both arms filters scheduler jitter."""
+    from repro.obs import Tracer
+
+    if use_cache and os.path.exists(cache_path):
+        with open(cache_path) as f:
+            result = json.load(f)
+    else:
+        arm_specs = {"none": 0, "heavy": 12}
+        arms = {}
+        for arm_name, preempt_every in arm_specs.items():
+            best_off, best_on, events = None, None, 0
+            for _ in range(repeats):
+                off = run_pipeline_arm(True, preempt_every, size=size,
+                                       iters=iters)
+                if best_off is None or off["wall_s"] < best_off["wall_s"]:
+                    best_off = off
+            for _ in range(repeats):
+                tr = Tracer()
+                on = run_pipeline_arm(True, preempt_every, size=size,
+                                      iters=iters, tracer=tr)
+                if best_on is None or on["wall_s"] < best_on["wall_s"]:
+                    best_on = on
+                    events = len(tr)
+            off_us = best_off["us_per_chunk"]
+            on_us = best_on["us_per_chunk"]
+            delta = (on_us - off_us) / max(off_us, 1e-9)
+            arms[arm_name] = {
+                "untraced_us_per_chunk": off_us,
+                "traced_us_per_chunk": on_us,
+                "delta_ratio": delta,
+                "delta_us": on_us - off_us,
+                "chunks": best_on["chunks"],
+                "events_recorded": events,
+                "pass": bool(delta <= TRACER_GATE_DELTA
+                             or (on_us - off_us) <= TRACER_ABS_FLOOR_US),
+            }
+        result = {
+            "config": {"size": size, "iters": iters, "repeats": repeats},
+            "arms": arms,
+            "gate": {"delta_threshold": TRACER_GATE_DELTA,
+                     "abs_floor_us": TRACER_ABS_FLOOR_US,
+                     "pass": all(a["pass"] for a in arms.values())},
+        }
+        with open(cache_path, "w") as f:
+            json.dump(result, f, indent=1)
+    printer("# tracer overhead: traced vs untraced pipelined dispatch "
+            "(name,us_per_call,derived)")
+    for name, a in result["arms"].items():
+        printer(f"tracer_overhead/{name},{a['traced_us_per_chunk']:.0f},"
+                f"untraced_us={a['untraced_us_per_chunk']:.0f};"
+                f"delta_ratio={a['delta_ratio']:.4f};"
+                f"delta_us={a['delta_us']:.1f};"
+                f"events={a['events_recorded']};"
+                f"gate<={TRACER_GATE_DELTA}")
+    assert result["gate"]["pass"], (
+        f"tracer overhead exceeds the gate (<= {TRACER_GATE_DELTA:.0%} "
+        f"relative or <= {TRACER_ABS_FLOOR_US}us/chunk absolute): "
+        f"{json.dumps(result['arms'])}")
     return result

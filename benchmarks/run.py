@@ -15,6 +15,80 @@ import warnings
 
 warnings.filterwarnings("ignore")
 
+# every cached bench artifact the consolidated summary sweeps up
+_BENCH_ARTIFACTS = (
+    "bench_reconfig.json",
+    "bench_prefetch.json",
+    "bench_chunk_pipeline.json",
+    "bench_tracer_overhead.json",
+    "bench_policies.json",
+    "bench_elastic.json",
+    "bench_cluster.json",
+    "bench_decode.json",
+    "bench_sweep.json",
+)
+
+
+def _headline(d, prefix="", depth=0):
+    """Flatten a bench artifact's scalar headlines: top-level numbers,
+    booleans and short strings, plus one nested level (enough to pull
+    ``gate.pass`` and per-arm ratios without dumping whole sweeps)."""
+    out = {}
+    if not isinstance(d, dict):
+        return out
+    for k, v in d.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, bool) or isinstance(v, (int, float)):
+            out[key] = v
+        elif isinstance(v, str) and len(v) <= 64:
+            out[key] = v
+        elif isinstance(v, dict) and depth < 1:
+            out.update(_headline(v, prefix=f"{key}.", depth=depth + 1))
+    return out
+
+
+def write_summary(path: str = "BENCH_SUMMARY.json",
+                  printer=print) -> dict:
+    """Consolidate every cached ``bench_*.json`` headline into one
+    artifact, stamped with the git sha and a timestamp, so CI publishes a
+    single comparable file per run instead of nine."""
+    import json
+    import os
+    import subprocess
+    import time
+
+    sha = None
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        pass
+    benches = {}
+    for name in _BENCH_ARTIFACTS:
+        if not os.path.exists(name):
+            continue
+        try:
+            with open(name) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            continue
+        if isinstance(data, list):  # the sweep is a row list: count only
+            benches[name] = {"n_rows": len(data)}
+        else:
+            benches[name] = _headline(data)
+    summary = {
+        "git_sha": sha,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "n_benches": len(benches),
+        "benches": benches,
+    }
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=1, default=str)
+    printer(f"# consolidated summary: {path} "
+            f"({len(benches)} bench artifacts, sha={sha and sha[:9]})")
+    return summary
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -47,6 +121,13 @@ def main() -> None:
     else:
         bench_overhead.measure_chunk_pipeline(use_cache=not args.no_cache)
 
+    # flight-recorder overhead gate (traced vs untraced dispatch,
+    # DESIGN.md §11); same fast-mode caching contract
+    if args.fast and not os.path.exists("bench_tracer_overhead.json"):
+        print("tracer_overhead/skipped,0,fast-mode")
+    else:
+        bench_overhead.measure_tracer_overhead(use_cache=not args.no_cache)
+
     # scheduling-policy arm (fcfs vs edf vs wfq on one stream); like the
     # sweep, fast mode only reports it when already cached
     if args.fast and not os.path.exists("bench_policies.json"):
@@ -78,6 +159,7 @@ def main() -> None:
 
     if args.fast and not os.path.exists("bench_sweep.json"):
         print("sweep/skipped,0,fast-mode")
+        write_summary()
         return
     sweep = full_sweep(repeats=2, use_cache=not args.no_cache)
     bench_service_time.emit(sweep)
@@ -102,6 +184,8 @@ def main() -> None:
                   f"dominant={r['dominant'].split('_')[0]};"
                   f"useful={r['useful_flops_ratio']};"
                   f"frac={r['roofline_fraction']}")
+
+    write_summary()
 
 
 if __name__ == "__main__":

@@ -160,6 +160,12 @@ class Client:
         return self.serving.submit(prompt, params, tenant=tenant)
 
     # -- observability ---------------------------------------------------
+    @property
+    def tracer(self):
+        """The flight recorder threaded through the backend (``tracer=``
+        shell kwarg), or ``None`` when tracing is off."""
+        return getattr(self.backend, "tracer", None)
+
     def report(self) -> dict:
         """The backend's versioned report (layer ``scheduler`` or
         ``cluster``; see ``core/reporting.py``)."""

@@ -223,9 +223,21 @@ class ClusterFrontend:
                  poll_s: float = 0.01,
                  spill_dir: Optional[str] = None,
                  start: bool = True,
+                 tracer=None,
                  **shell_kwargs):
+        # flight recorder (obs/, DESIGN.md §11): ONE shared handle for the
+        # whole fabric — every node shell emits into the same timeline as
+        # the frontend's route/migrate/failover events, so a cross-shell
+        # migration reads as one contiguous story in the trace.
+        self.tracer = tracer
+        self._trace_track = ("cluster", 0)
         if nodes is not None:
             self.nodes: List[ClusterNode] = list(nodes)
+            if tracer is None:  # adopt a tracer the caller's shells carry
+                self.tracer = next(
+                    (t for t in (getattr(n.shell, "tracer", None)
+                                 for n in self.nodes) if t is not None),
+                    None)
         else:
             if n_shells < 1:
                 raise ValueError(f"n_shells must be >= 1, got {n_shells}")
@@ -234,6 +246,7 @@ class ClusterFrontend:
                     i, n_regions=regions_per_shell,
                     config=replace(config) if config is not None else None,
                     power=(power_models[i] if power_models else None),
+                    tracer=tracer,
                     **shell_kwargs)
                 for i in range(n_shells)]
         self.router: RouterPolicy = (
@@ -346,6 +359,9 @@ class ClusterFrontend:
             if self._closed:
                 raise RuntimeError("cluster frontend is closed")
             node = self._route(task)
+            if self.tracer is not None:
+                self.tracer.emit("route", self._trace_track, tid=task.tid,
+                                 node=node.node_id)
             rec = _Record(tid=task.tid, task=task, frontend=self,
                           node=node, inner=None,
                           t_submit=time.perf_counter())
@@ -488,6 +504,7 @@ class ClusterFrontend:
     def _do_migrate(self, rec: _Record, src: ClusterNode,
                     target: Optional[ClusterNode], timeout: float) -> bool:
         task = rec.task
+        t_mig0 = time.perf_counter()
         if not self._take_task(rec, src, timeout):
             return False
         # we own the task: its source handle is settled, its context (if
@@ -496,8 +513,12 @@ class ClusterFrontend:
             committed = self._spill_roundtrip(task, kind="migration")
         except CheckpointCorruptError:
             committed = None   # restart from scratch rather than trust it
-        return self._resubmit(rec, src, committed, target=target,
-                              kind="migration")
+        ok = self._resubmit(rec, src, committed, target=target,
+                            kind="migration")
+        if self.tracer is not None:
+            self.tracer.emit_span("migrate", self._trace_track, t_mig0,
+                                  tid=task.tid, src=src.node_id, ok=ok)
+        return ok
 
     def _take_task(self, rec: _Record, src: ClusterNode,
                    timeout: float) -> bool:
@@ -732,6 +753,10 @@ class ClusterFrontend:
                 "readmitted": readmitted,
                 "resumed_from_checkpoint": resumed,
             })
+        if self.tracer is not None:
+            self.tracer.emit("failover", self._trace_track,
+                             node=node.node_id, readmitted=readmitted,
+                             resumed=resumed)
 
     def _recover_committed(self, rec: _Record,
                            node: ClusterNode) -> Optional[Committed]:
@@ -790,7 +815,8 @@ class ClusterFrontend:
                              if rec.t_done is not None)
         t_end = max((rec.t_done for rec in recs
                      if rec.t_done is not None), default=self._t0)
-        wall = max(t_end - self._t0, 1e-9)
+        raw_wall = t_end - self._t0
+        wall = max(raw_wall, 1e-9)
         per_shell = {}
         for node in self.nodes:
             sched = node.scheduler
@@ -819,7 +845,8 @@ class ClusterFrontend:
                     rep["pool"]["region_seconds"]
                     * rep["pool"]["utilization"]),
             })
-        from repro.core.reporting import stamp
+        from repro.core.reporting import safe_rate, stamp
+        from repro.obs.metrics import trace_section
 
         pct = Scheduler._percentile   # same nearest-rank estimator as the
         return stamp("cluster", {     # per-shell reports
@@ -829,7 +856,10 @@ class ClusterFrontend:
             "rebalance": self.rebalance,
             "n_submitted": len(recs),
             "wall_s": wall,
-            "throughput_tps": counters["n_done"] / wall,
+            # rate over the RAW wall: a report taken before any completion
+            # (wall == 0) emits 0.0, not an inf-like 1e9-scale rate
+            "throughput_tps": safe_rate(counters["n_done"], raw_wall),
+            "trace": trace_section(self.tracer),
             "turnaround_p50_s": pct(turnarounds, 0.50),
             "turnaround_p99_s": pct(turnarounds, 0.99),
             "lost_tasks": counters["n_failed"],

@@ -65,6 +65,7 @@ class ClusterNode:
         self.shell = shell if shell is not None else Shell(
             n_regions=n_regions, **shell_kwargs)
         self.scheduler = Scheduler(self.shell, config)
+        self._trace_track = ("node", node_id)
         self.power = power or NodePowerModel()
         self.outstanding = 0         # maintained by the frontend
         self.crash: Optional[BaseException] = None
@@ -95,6 +96,9 @@ class ClusterNode:
             self.scheduler.run_forever()
         except RuntimeError as e:
             self.crash = e
+            if self.tracer is not None:
+                self.tracer.emit("node_crash", self._trace_track,
+                                 error=str(e))
 
     def shutdown(self, timeout: float = 10.0) -> None:
         """Idempotent teardown: stop the scheduler loop (cancelling queued
@@ -124,9 +128,16 @@ class ClusterNode:
                 and self.scheduler.serving
                 and any(r.alive for r in self.shell.regions))
 
+    @property
+    def tracer(self):
+        """The shared flight recorder, if the shell carries one."""
+        return getattr(self.shell, "tracer", None)
+
     def inject_failure(self) -> None:
         """Kill the whole node: every region fails (the scheduler loop
         notices the dead fabric, fails outstanding handles and exits)."""
+        if self.tracer is not None:
+            self.tracer.emit("node_failure", self._trace_track)
         for r in self.shell.regions:
             r.inject_failure()
         self.scheduler._kick()  # wake a loop blocked in WaitForInterrupt

@@ -218,6 +218,10 @@ class RegionPool:
         self.grows += 1
         self.resize_events.append(
             (time.perf_counter(), "grow", region.rid, self.n_active))
+        tr = getattr(self.shell, "tracer", None)
+        if tr is not None:
+            tr.emit("pool_resize", ("pool", 0), kind="grow",
+                    rid=region.rid, n_regions=self.n_active)
         self.replan(footprints if footprints is not None else [width])
         return region
 
@@ -279,6 +283,10 @@ class RegionPool:
             self.shrinks += 1
             self.resize_events.append(
                 (time.perf_counter(), "shrink", rid, self.n_active))
+            tr = getattr(self.shell, "tracer", None)
+            if tr is not None:
+                tr.emit("pool_resize", ("pool", 0), kind="shrink",
+                        rid=rid, n_regions=self.n_active)
             if scheduler is not None:
                 scheduler._dead_since.pop(rid, None)
                 scheduler._idle_hint.discard(rid)

@@ -161,6 +161,9 @@ class ReconfigEngine:
                  cache_capacity: Optional[int] = None):
         self.cache = LRUBitstreamCache(cache_capacity)
         self._icap = threading.Lock()  # single ICAP port (the load itself)
+        # flight recorder handle (obs/, DESIGN.md §11); the owning Shell
+        # threads it in.  Emits ICAP hold/wait and compile spans.
+        self.tracer = None
         self.stats = ReconfigStats()
         self.key_stats: Dict[tuple, KeyStats] = {}
         self.simulate_partial_s = simulate_partial_s
@@ -217,9 +220,17 @@ class ReconfigEngine:
                 # later cache hits on this entry must not claim one either
                 entry.consumed = True
 
+        t_wait0 = time.perf_counter()
         with self._icap:  # only one RR loads a bitstream at a time
+            t_acq = time.perf_counter()
             if self.simulate_partial_s:
                 time.sleep(self.simulate_partial_s)
+        tr = self.tracer
+        if tr is not None:
+            # hold span on the shared-port track; acquire wait rides along
+            # as an attr so the derived pass can total ICAP serialization
+            tr.emit_span("icap", ("icap", 0), t_acq, kernel=kernel_name,
+                         wait_s=t_acq - t_wait0)
         dt = time.perf_counter() - t0
         with self._lock:
             self.stats.partial_loads += 1
@@ -335,6 +346,10 @@ class ReconfigEngine:
         compiled = entry.lower(*args).compile()
         with self._lock:
             self.stats.total_compile_s += time.perf_counter() - t0
+        tr = self.tracer
+        if tr is not None:
+            tr.emit_span("compile", ("compile", 0), t0,
+                         kernel=kd.name, program=program)
         return compiled
 
     # ------------------------------------------------------------------

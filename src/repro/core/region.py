@@ -110,10 +110,15 @@ class Region:
                  devices=None, geometry: Tuple[int, ...] = (1,),
                  chunk_budget: Optional[int] = None,
                  pipeline: bool = True,
-                 engine_mode: Optional[str] = None):
+                 engine_mode: Optional[str] = None,
+                 tracer=None):
         self.rid = rid
         self.engine = engine
         self.interrupts = interrupts
+        # flight recorder (obs/, DESIGN.md §11): None = tracing disabled,
+        # and every emit site below is guarded to a single None check
+        self.tracer = tracer
+        self._track = ("region", rid)
         self.devices = devices
         self.geometry = geometry
         self.chunk_budget = chunk_budget
@@ -189,6 +194,11 @@ class Region:
         self._post("launch", task)
 
     def request_preempt(self):
+        tr = self.tracer
+        if tr is not None:
+            cur = self.current_task
+            tr.emit("preempt_request", self._track,
+                    tid=cur.tid if cur is not None else None)
         self._preempt.set()
         if self.flag is not None:
             # zero-copy device put: the in-flight megakernel observes the
@@ -296,6 +306,9 @@ class Region:
                 finally:
                     self._dec()
             except RegionFailure:
+                if self.tracer is not None:
+                    self.tracer.emit("region_failed", self._track,
+                                     tid=task.tid if task else None)
                 self.interrupts.raise_interrupt(Event(
                     EventKind.REGION_FAILED, self.rid, task=task))
                 return  # thread dies; scheduler handles re-enqueue
@@ -324,6 +337,7 @@ class Region:
         if self.loaded == key:
             return
         task.status = TaskStatus.RECONFIGURING
+        t_rc0 = time.perf_counter()
         fn, dt = self.engine.load(task.kernel, task.args, self.geometry,
                                   self.devices, program=self.program)
         self.loaded = key
@@ -331,6 +345,10 @@ class Region:
         self.stats.reconfigs += 1
         self.stats.reconfig_s += dt
         task.n_reconfigs += 1
+        tr = self.tracer
+        if tr is not None:
+            tr.emit_span("reconfig", self._track, t_rc0, tid=task.tid,
+                         kernel=task.kernel)
         self.interrupts.raise_interrupt(Event(
             EventKind.RECONFIG_DONE, self.rid, task=task, payload=dt))
 
@@ -417,6 +435,10 @@ class Region:
         self.stats.preemptions += 1
         self.current_task = None
         self.stats.busy_s += time.perf_counter() - t_busy0
+        tr = self.tracer
+        if tr is not None:
+            tr.emit_span("run", self._track, t_busy0, tid=task.tid)
+            tr.emit("preempt_honored", self._track, tid=task.tid)
         self.interrupts.raise_interrupt(Event(
             EventKind.TASK_PREEMPTED, self.rid, task=task))
 
@@ -435,6 +457,10 @@ class Region:
         self.stats.kernels_run += 1
         self.current_task = None
         self.stats.busy_s += time.perf_counter() - t_busy0
+        tr = self.tracer
+        if tr is not None:
+            tr.emit_span("run", self._track, t_busy0, tid=task.tid)
+            tr.emit("done", self._track, tid=task.tid)
         self.interrupts.raise_interrupt(Event(
             EventKind.TASK_DONE, self.rid, task=task))
 
@@ -468,14 +494,20 @@ class Region:
                                               budget_arr)
             pending.append(done)
 
+        tr = self.tracer
+
         def retire(done: int):
             """Account one resolved chunk boundary (EWMA, per-task work)."""
             nonlocal t_last
+            t_prev = t_last
             dt = time.perf_counter() - t_last
             if self.slowdown_s:
                 time.sleep(self.slowdown_s)
                 dt += self.slowdown_s
             t_last = time.perf_counter()
+            if tr is not None:
+                tr.emit("chunk", self._track, tid=task.tid,
+                        t=t_prev, dur=dt)
             a = 0.3
             self.stats.chunk_ewma_s = (
                 dt if self.stats.chunks == 0
@@ -587,6 +619,10 @@ class Region:
                 else a * per + (1 - a) * self.stats.chunk_ewma_s)
         self.stats.chunks += k
         task.run_s += dt
+        tr = self.tracer
+        if tr is not None:
+            tr.emit("mega_launch", self._track, tid=task.tid,
+                    t=t0, dur=dt, n_chunks=k, done=int(done))
         if not int(done):
             # the device exited on the flag at a chunk boundary
             self.stats.flag_poll_exits += 1

@@ -20,10 +20,33 @@ a breaking change (key removed or retyped), not for additions.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Dict
 
 REPORT_VERSION = 1
+
+# one description, shared by every layer that carries a trace section
+_TRACE_DOC = ("flight-recorder derived metrics (obs/, DESIGN.md §11): "
+              "per-task latency breakdown, preempt response percentiles, "
+              "region occupancy, ICAP serialization; {enabled: False} "
+              "when no tracer is threaded")
+
+
+def safe_rate(count: float, wall_s: float) -> float:
+    """``count / wall_s`` that reports 0.0 for an instant, unmeasured, or
+    non-finite window instead of raising or emitting an inf-like rate.
+
+    CI smokes can legitimately observe ``wall_s == 0`` (a report sampled
+    before the first completion, or a run whose start and end stamps
+    coincide at clock resolution); a throughput of 0.0 is the honest
+    answer there, where ``count / max(wall, 1e-9)`` fabricates a 1e9-scale
+    one."""
+    if not isinstance(wall_s, (int, float)) or not math.isfinite(wall_s):
+        return 0.0
+    if wall_s <= 0.0:
+        return 0.0
+    return count / wall_s
 
 # keys every stamped report carries, regardless of layer
 _ENVELOPE = {
@@ -68,6 +91,7 @@ _SCHEDULER = {
     "dispatch_stall_s": "wall time dispatch spent waiting on compiles",
     "pool": "region-pool capacity/utilization stats (elastic or static)",
     "reconfig": "nested shell_reconfig report (deduplicated detail)",
+    "trace": _TRACE_DOC,
 }
 
 _SHELL_RECONFIG = {
@@ -114,6 +138,7 @@ _CLUSTER = {
     "failover_events": "per-failover detail records",
     "energy_j_total": "summed per-shell energy model estimate",
     "per_shell": "per-shell scheduler/health/energy breakdown",
+    "trace": _TRACE_DOC,
 }
 
 _SERVING = {
@@ -136,6 +161,7 @@ _SERVING = {
     "decode_migrations": "cross-region/shell moves of decode rounds",
     "state_device_rounds": "rounds whose KV state stayed device-resident",
     "engine_mode": "region engine the backend shell runs (None = cluster)",
+    "trace": _TRACE_DOC,
 }
 
 SCHEMA: Dict[str, Dict[str, str]] = {

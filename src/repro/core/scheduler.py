@@ -40,7 +40,8 @@ from typing import List, Optional
 from repro.core.interrupts import Event, EventKind
 from repro.core.policy import (POLICY_NAMES, SchedulingPolicy, make_policy,
                                region_fits)
-from repro.core.reporting import stamp
+from repro.core.reporting import safe_rate, stamp
+from repro.obs.metrics import trace_section
 from repro.core.region import Region, RegionState
 from repro.core.shell import Shell
 from repro.core.submit import SubmissionQueue, TaskHandle
@@ -122,6 +123,11 @@ class Scheduler:
                 f"config must be a SchedulerConfig (or None), got "
                 f"{type(config).__name__}")
         self.shell = shell
+        # flight recorder (obs/, DESIGN.md §11): shared with the shell so
+        # scheduler lifecycle events land on the same timeline as region
+        # run/reconfig spans.  None disables tracing at zero cost.
+        self.tracer = getattr(shell, "tracer", None)
+        self._trace_track = ("sched", 0)
         # elastic region pool (core/pool.py); ticked from the event loop
         self.pool = pool
         self.cfg = (config or SchedulerConfig()).validate()
@@ -200,6 +206,10 @@ class Scheduler:
         while the task is still queued.  The handle resolves once a
         serving loop processes the task — submitting while no loop runs
         defers the work to the next ``run()``/``run_forever()``."""
+        tr = self.tracer
+        if tr is not None:
+            tr.emit("submit", self._trace_track, tid=task.tid,
+                    kernel=task.kernel, priority=task.priority)
         return self._submissions.submit(task)
 
     def request_handoff(self, tid: int, callback) -> None:
@@ -448,6 +458,10 @@ class Scheduler:
             self.policy.on_requeue(task)
         else:
             self.policy.enqueue(task)
+        tr = self.tracer
+        if tr is not None:
+            tr.emit("queue", self._trace_track, tid=task.tid,
+                    requeue=requeue)
         self._refresh_prefetch_hints()
 
     def _cancel_queued(self):
@@ -662,6 +676,10 @@ class Scheduler:
         return True
 
     def _dispatch(self, region: Region, task: Task, quiet=True):
+        tr = self.tracer
+        if tr is not None:
+            tr.emit("dispatch", self._trace_track, tid=task.tid,
+                    rid=region.rid)
         task.last_dispatched_rid = region.rid
         key = (task.kernel, task.args.signature(), region.geometry)
         if self.cfg.full_reconfig_mode:
@@ -786,7 +804,8 @@ class Scheduler:
                 "max_service_s": max(st) if st else 0.0,
             }
         span = max((t.t_done for t in tasks if t.t_done), default=self.t0)
-        wall = max(span - self.t0, 1e-9)
+        raw_wall = span - self.t0
+        wall = max(raw_wall, 1e-9)
 
         # policy-level metrics: turnaround percentiles, deadlines, fairness
         turnarounds = sorted(t.turnaround for t in tasks
@@ -853,7 +872,9 @@ class Scheduler:
         return stamp("scheduler", {
             "n_done": len(tasks),
             "wall_s": wall,
-            "throughput_tps": len(tasks) / wall,
+            # rate over the RAW wall: an instant window (CI smoke with no
+            # completions) reports 0.0 instead of an inf-like 1e9 rate
+            "throughput_tps": safe_rate(len(tasks), raw_wall),
             "policy": self.policy.name,
             "service_by_priority": per_prio,
             "turnaround_p50_s": self._percentile(turnarounds, 0.50),
@@ -894,4 +915,5 @@ class Scheduler:
             "dispatch_stall_s": es.total_stall_s,
             "pool": pool_stats,
             "reconfig": detail,
+            "trace": trace_section(self.tracer),
         })

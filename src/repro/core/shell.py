@@ -41,12 +41,18 @@ class Shell:
                  prefetch_max_queue: int = 64,
                  region_widths: Optional[Sequence[int]] = None,
                  pipeline: bool = True,
-                 engine: Optional[str] = None):
+                 engine: Optional[str] = None,
+                 tracer=None):
         self.devices = list(devices if devices is not None else jax.devices())
         self.interrupts = InterruptController()
+        # flight recorder (obs/, DESIGN.md §11): one shared handle for the
+        # whole shell — regions, the reconfig engine, the pool, and the
+        # scheduler all emit into it.  None disables tracing at zero cost.
+        self.tracer = tracer
         self.engine = ReconfigEngine(simulate_partial_s=simulate_partial_s,
                                      simulate_full_s=simulate_full_s,
                                      cache_capacity=cache_capacity)
+        self.engine.tracer = tracer
         # the worker thread starts lazily with the scheduler's first hint
         self.prefetcher = BitstreamPrefetcher(
             self.engine, max_queue=prefetch_max_queue, auto_start=False)
@@ -87,7 +93,8 @@ class Shell:
         r = Region(rid, self.engine, self.interrupts,
                    devices=list(devices), geometry=(len(devices),),
                    chunk_budget=self.chunk_budget,
-                   engine_mode=self.engine_mode)
+                   engine_mode=self.engine_mode,
+                   tracer=self.tracer)
         r.slowdown_s = self.region_slowdown_s
         self.floorplanner.bind(rid, devices)
         self.regions.append(r)

@@ -70,8 +70,30 @@ from repro.models import transformer as TF
 from repro.models.lm import make_decode_step, make_prefill_step
 
 
+def _make_tracer(trace_out):
+    """A fresh flight recorder when ``--trace-out`` asked for one, else
+    ``None`` (the zero-cost-disabled default every layer checks for)."""
+    if not trace_out:
+        return None
+    from repro.obs import Tracer
+    return Tracer()
+
+
+def _write_trace(tracer, trace_out, quiet: bool, tag: str):
+    """Export the run's events as a Chrome/Perfetto trace JSON."""
+    if tracer is None or not trace_out:
+        return
+    from repro.obs import export_chrome_trace
+    export_chrome_trace(tracer, path=trace_out)
+    if not quiet:
+        print(f"[{tag}] trace written to {trace_out} "
+              f"({len(tracer)} events, {tracer.dropped} dropped) — "
+              f"open in ui.perfetto.dev")
+
+
 def serve(cfg, *, batch: int = 4, prompt_len: int = 32, gen: int = 16,
-          seed: int = 0, quiet: bool = False):
+          seed: int = 0, quiet: bool = False, trace_out: str = None):
+    tracer = _make_tracer(trace_out)
     key = jax.random.key(seed)
     params = TF.init_params(key, cfg, dtype=jnp.float32)
     prompts = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab_size)
@@ -87,17 +109,25 @@ def serve(cfg, *, batch: int = 4, prompt_len: int = 32, gen: int = 16,
     decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
 
     t0 = time.time()
+    tp0 = time.perf_counter()
     cache, last = prefill(params, b)
     tok = jnp.argmax(last[:, :cfg.vocab_size], -1).astype(jnp.int32)[:, None]
     out = [np.asarray(tok)]
     t_prefill = time.time() - t0
+    if tracer is not None:
+        tracer.emit_span("prefill", ("lm", 0), tp0,
+                         batch=batch, prompt_len=prompt_len)
     t0 = time.time()
     for _ in range(gen - 1):
+        tp0 = time.perf_counter()
         tok, cache = decode(params, cache, tok, key)
         out.append(np.asarray(tok))
+        if tracer is not None:
+            tracer.emit_span("decode_step", ("lm", 0), tp0, batch=batch)
     jax.block_until_ready(tok)
     t_decode = time.time() - t0
     toks = np.concatenate(out, axis=1)
+    _write_trace(tracer, trace_out, quiet, "serve")
     if not quiet:
         print(f"[serve] prefill {prompt_len} tok x{batch}: {t_prefill:.2f}s; "
               f"decode {gen} tok: {t_decode:.2f}s "
@@ -114,7 +144,8 @@ def serve_task_stream(*, n_tasks: int = 16, n_regions: int = 2,
                       autoscale: bool = False, min_regions: int = 1,
                       max_regions: int = 3, metrics_out: str = None,
                       cache_capacity: int = None, quiet: bool = False,
-                      engine: str = "pipelined") -> dict:
+                      engine: str = "pipelined",
+                      trace_out: str = None) -> dict:
     """Serve a random blur-task stream through the preemptive scheduler and
     return its report, including the async-reconfiguration statistics.
 
@@ -167,17 +198,19 @@ def serve_task_stream(*, n_tasks: int = 16, n_regions: int = 2,
             rng, kernels, n_tasks, rate_s, arg_factory,
             tenants=tenant_names,
             deadline_slack=(1.0, 3.0) if policy == "edf" else None)
+    tracer = _make_tracer(trace_out)
     pool = None
     if autoscale:
         shell = Shell(n_regions=min_regions, chunk_budget=2,
                       prefetch=prefetch, cache_capacity=cache_capacity,
-                      engine=engine)
+                      engine=engine, tracer=tracer)
         pool = RegionPool(shell, autoscaler=Autoscaler(AutoscalerConfig(
             min_regions=min_regions, max_regions=max_regions,
             grow_queue_depth=1.5, cooldown_s=0.3, idle_grace_s=0.4)))
     else:
         shell = Shell(n_regions=n_regions, chunk_budget=2, prefetch=prefetch,
-                      cache_capacity=cache_capacity, engine=engine)
+                      cache_capacity=cache_capacity, engine=engine,
+                      tracer=tracer)
     sched = Scheduler(shell, SchedulerConfig(policy=policy), pool=pool)
 
     if not open_loop:
@@ -222,6 +255,7 @@ def serve_task_stream(*, n_tasks: int = 16, n_regions: int = 2,
         rep["stranded_handles"] += sum(1 for h in handles if not h.done())
 
     shell.shutdown()
+    _write_trace(tracer, trace_out, quiet, "serve")
     if metrics_out:
         # structured metrics for CI/benchmarks (no stdout scraping); keys
         # that are not JSON-serializable (none today) fall back to str()
@@ -264,7 +298,8 @@ def serve_cluster(*, n_shells: int = 2, regions_per_shell: int = 1,
                   rebalance: bool = True, force_migrations: int = 0,
                   fail_shell: int = None, fail_after: int = None,
                   prefetch: bool = True, metrics_out: str = None,
-                  quiet: bool = False, engine: str = "pipelined") -> dict:
+                  quiet: bool = False, engine: str = "pipelined",
+                  trace_out: str = None) -> dict:
     """Serve a bursty open-loop blur stream through a multi-shell cluster
     (DESIGN.md §7) and return the aggregated ``ClusterFrontend.report()``.
 
@@ -296,11 +331,13 @@ def serve_cluster(*, n_shells: int = 2, regions_per_shell: int = 1,
                     priority=int(rng.integers(5)))
 
     tasks = [make_task(i) for i in range(n_tasks)]
+    tracer = _make_tracer(trace_out)
     fe = ClusterFrontend(n_shells=n_shells,
                          regions_per_shell=regions_per_shell,
                          router=router, rebalance=rebalance,
                          config=SchedulerConfig(policy=policy),
-                         chunk_budget=2, prefetch=prefetch, engine=engine)
+                         chunk_budget=2, prefetch=prefetch, engine=engine,
+                         tracer=tracer)
     for node in fe.nodes:
         # deterministic per-chunk work (see serve_task_stream) + warm
         # bitstreams so the trace measures the fabric, not XLA compiles
@@ -341,6 +378,7 @@ def serve_cluster(*, n_shells: int = 2, regions_per_shell: int = 1,
     for h in handles:
         h.wait(timeout=180.0)
     rep = fe.shutdown()
+    _write_trace(tracer, trace_out, quiet, "cluster")
     if metrics_out:
         with open(metrics_out, "w") as f:
             json.dump(rep, f, indent=2, default=str)
@@ -371,7 +409,7 @@ def serve_decode(*, n_sequences: int = 6, prompt_len: int = 12,
                  disaggregate: bool = True, preempt_every: int = 0,
                  partial_s: float = 0.0, seed: int = 0, verify: bool = True,
                  metrics_out: str = None, quiet: bool = False,
-                 engine: str = "pipelined") -> dict:
+                 engine: str = "pipelined", trace_out: str = None) -> dict:
     """Token-serving driver (DESIGN.md §9): submit ``n_sequences``
     generation requests through the continuous-batching ``ServingEngine``
     over a preemptive scheduler, verify every streamed sequence against
@@ -397,9 +435,11 @@ def serve_decode(*, n_sequences: int = 6, prompt_len: int = 12,
     # probing needs real mid-round boundaries: one token per chunk, and
     # stretched chunks so the probe lands before the round drains (same
     # slowdown hook the straggler tests use)
+    tracer = _make_tracer(trace_out)
     shell = Shell(n_regions=n_regions,
                   chunk_budget=1 if preempt_every else 2,
-                  simulate_partial_s=partial_s, engine=engine)
+                  simulate_partial_s=partial_s, engine=engine,
+                  tracer=tracer)
     if preempt_every and engine != "megakernel":
         # stretch chunks so the probe thread lands mid-round; megakernel
         # probes arm the deterministic flag write instead (no timing race,
@@ -445,6 +485,7 @@ def serve_decode(*, n_sequences: int = 6, prompt_len: int = 12,
     rep = engine.drain(timeout=60.0)
     sched.drain(timeout=60.0)
     shell.shutdown()
+    _write_trace(tracer, trace_out, quiet, "decode")
     if metrics_out:
         with open(metrics_out, "w") as f:
             json.dump(rep, f, indent=2, default=str)
@@ -516,6 +557,10 @@ def main(argv=None):
                              "payloads (reproducible smokes/benchmarks)")
     common.add_argument("--metrics-out", default=None,
                         help="write the final versioned report JSON here")
+    common.add_argument("--trace-out", default=None,
+                        help="record a flight-recorder timeline and write "
+                             "it here as Chrome/Perfetto trace JSON "
+                             "(open in ui.perfetto.dev)")
     common.add_argument("--quiet", action="store_true")
     stream_common = argparse.ArgumentParser(add_help=False)
     stream_common.add_argument("--n-tasks", type=int, default=16)
@@ -626,7 +671,7 @@ def main(argv=None):
                       fail_after=args.fail_after,
                       prefetch=not args.no_prefetch,
                       metrics_out=args.metrics_out, quiet=args.quiet,
-                      engine=args.engine)
+                      engine=args.engine, trace_out=args.trace_out)
     elif args.cmd == "scheduler":
         serve_task_stream(n_tasks=args.n_tasks, n_regions=args.regions,
                           seed=args.seed,
@@ -639,7 +684,8 @@ def main(argv=None):
                           max_regions=args.max_regions,
                           metrics_out=args.metrics_out,
                           cache_capacity=args.cache_capacity,
-                          quiet=args.quiet, engine=args.engine)
+                          quiet=args.quiet, engine=args.engine,
+                          trace_out=args.trace_out)
     elif args.cmd == "decode":
         serve_decode(n_sequences=args.sequences, prompt_len=args.prompt_len,
                      max_new=args.max_new, slots=args.slots,
@@ -650,13 +696,13 @@ def main(argv=None):
                      partial_s=args.partial_s, seed=args.seed,
                      verify=not args.no_verify,
                      metrics_out=args.metrics_out, quiet=args.quiet,
-                     engine=args.engine)
+                     engine=args.engine, trace_out=args.trace_out)
     else:
         cfg = get_config(args.arch)
         if args.reduced:
             cfg = cfg.reduced()
         serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
-              gen=args.gen, seed=args.seed)
+              gen=args.gen, seed=args.seed, trace_out=args.trace_out)
 
 
 if __name__ == "__main__":

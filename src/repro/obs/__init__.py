@@ -1,0 +1,20 @@
+"""Flight recorder (DESIGN.md §11): structured trace events, Perfetto
+export, and derived latency metrics across scheduler/region/cluster/serving.
+
+The paper's headline claims are latency claims (1.66%/4.04% preemption
+overhead, "most urgent tasks deployed as fast as possible"); end-of-run
+counters cannot show *where* a slow p99 task spent its time.  This package
+is the event-level substrate: a lock-cheap bounded ring of timestamped
+``TraceEvent``s every layer emits into when a ``Tracer`` handle is threaded
+through it (``Shell(tracer=...)``, ``ClusterFrontend(tracer=...)``,
+``Client(tracer=...)``), a Chrome-trace-event exporter that renders a run
+as a Gantt timeline in ui.perfetto.dev, and a derived-metrics pass that
+folds the raw stream into per-task latency breakdowns and preemption
+response percentiles merged into ``report()["trace"]``.
+"""
+from repro.obs.export import export_chrome_trace
+from repro.obs.metrics import derive_metrics, trace_section
+from repro.obs.tracer import TraceEvent, Tracer
+
+__all__ = ["TraceEvent", "Tracer", "export_chrome_trace",
+           "derive_metrics", "trace_section"]

@@ -1,0 +1,115 @@
+"""Chrome-trace-event (Perfetto-loadable) JSON export.
+
+Track layout (DESIGN.md §11): each track *type* becomes a Chrome trace
+"process" and each instance a "thread" within it, so ui.perfetto.dev
+renders one labelled row per region, per ICAP port, per shell/node, per
+serving slot, etc.  Spans (``dur > 0``) export as ``"X"`` complete events
+and instants as ``"i"`` with thread scope; timestamps are microseconds
+relative to the tracer's ``t0``.
+"""
+from __future__ import annotations
+
+import json
+from typing import Iterable, Optional, Union
+
+from repro.obs.tracer import TraceEvent, Tracer
+
+# Stable process ordering so the Perfetto UI groups rows the same way on
+# every run; unknown track types sort after these, alphabetically.
+_TRACK_ORDER = ["sched", "region", "icap", "compile", "pool", "cluster",
+                "node", "serving", "slot", "lm"]
+_TRACK_LABEL = {
+    "sched": "scheduler",
+    "region": "regions",
+    "icap": "ICAP ports",
+    "compile": "bitstream compiles",
+    "pool": "region pool",
+    "cluster": "cluster frontend",
+    "node": "cluster nodes",
+    "serving": "serving engine",
+    "slot": "serving slots",
+    "lm": "lm pipeline",
+}
+
+
+def _track_key(track_type: str) -> tuple:
+    try:
+        return (0, _TRACK_ORDER.index(track_type))
+    except ValueError:
+        return (1, track_type)
+
+
+def export_chrome_trace(source: Union[Tracer, Iterable[TraceEvent]],
+                        path: Optional[str] = None,
+                        t0: Optional[float] = None) -> dict:
+    """Render events as a Chrome trace dict; optionally write it to ``path``.
+
+    ``source`` is a :class:`Tracer` (preferred — carries ``t0`` and drop
+    accounting) or a bare event iterable (then pass ``t0`` or the earliest
+    event time is used).
+    """
+    if isinstance(source, Tracer):
+        events = source.events()
+        base = source.t0 if t0 is None else t0
+        other = {"tracer_capacity": source.capacity,
+                 "events_emitted": source.n_emitted,
+                 "events_dropped": source.dropped}
+    else:
+        events = list(source)
+        base = t0 if t0 is not None else min((e.t for e in events),
+                                             default=0.0)
+        other = {}
+
+    tracks = sorted({e.track for e in events},
+                    key=lambda tr: (_track_key(str(tr[0])), tr[1:]))
+    pid_of = {}
+    for tr in tracks:
+        pid_of.setdefault(str(tr[0]), len(pid_of) + 1)
+
+    out = []
+    for ttype in sorted(pid_of, key=_track_key):
+        pid = pid_of[ttype]
+        out.append({"ph": "M", "name": "process_name", "pid": pid, "tid": 0,
+                    "args": {"name": _TRACK_LABEL.get(ttype, ttype)}})
+    for tr in tracks:
+        ttype = str(tr[0])
+        inst = tr[1] if len(tr) > 1 else 0
+        out.append({"ph": "M", "name": "thread_name",
+                    "pid": pid_of[ttype], "tid": _tid(tr),
+                    "args": {"name": f"{ttype} {inst}"}})
+
+    for e in events:
+        args = dict(e.attrs) if e.attrs else {}
+        if e.tid is not None:
+            args["task"] = e.tid
+        rec = {"name": e.kind, "cat": str(e.track[0]),
+               "pid": pid_of[str(e.track[0])], "tid": _tid(e.track),
+               "ts": (e.t - base) * 1e6}
+        if args:
+            rec["args"] = args
+        if e.dur > 0.0:
+            rec["ph"] = "X"
+            rec["dur"] = e.dur * 1e6
+        else:
+            rec["ph"] = "i"
+            rec["s"] = "t"
+        out.append(rec)
+
+    doc = {"traceEvents": out, "displayTimeUnit": "ms"}
+    if other:
+        doc["otherData"] = other
+    if path is not None:
+        with open(path, "w") as f:
+            json.dump(doc, f)
+    return doc
+
+
+def _tid(track: tuple) -> int:
+    """Numeric thread id for a track instance (Chrome tids are ints)."""
+    inst = track[1] if len(track) > 1 else 0
+    if isinstance(inst, bool):
+        return int(inst)
+    if isinstance(inst, int):
+        return inst
+    # Non-int instance ids (e.g. node names) hash to a stable small int.
+    return sum(ord(c) for c in str(inst)) % 997

@@ -38,8 +38,9 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from repro.core.reporting import stamp
+from repro.core.reporting import safe_rate, stamp
 from repro.core.task import Task
+from repro.obs.metrics import trace_section
 from repro.serving.kernels import (COL_ACTIVE, COL_LAST_TOK, COL_N_EMIT,
                                    init_state)
 from repro.serving.sequence import (SamplingParams, Sequence, SequenceError,
@@ -117,7 +118,13 @@ class ServingEngine:
                 f"backend must expose submit(task); got "
                 f"{type(backend).__name__}")
         self.backend = backend
+        # flight recorder (obs/, DESIGN.md §11): the backend's handle —
+        # Scheduler and ClusterFrontend both expose ``.tracer`` — so
+        # serving events share the timeline of the regions that ran them
+        self.tracer = getattr(backend, "tracer", None)
+        self._trace_track = ("serving", 0)
         self.cfg = (config or ServingConfig()).validate()
+        self._slot_t0: List[Optional[float]] = [None] * self.cfg.max_slots
         self.stats = _Stats()
         self._lock = threading.Lock()
         self._work = threading.Event()
@@ -153,6 +160,9 @@ class ServingEngine:
             self._waiting.append((seq, handle))
             self._handles[seq.sid] = handle
             self._settled.clear()
+        if self.tracer is not None:
+            self.tracer.emit("seq_submit", self._trace_track, tid=seq.sid,
+                             prompt_len=len(seq.prompt))
         self._work.set()
         return handle
 
@@ -282,6 +292,9 @@ class ServingEngine:
                             if cfg.prefill_regions is not None else None),
             )
             th = self.backend.submit(task)
+            if self.tracer is not None:
+                self.tracer.emit("prefill_dispatch", self._trace_track,
+                                 tid=seq.sid)
             seq.status = SequenceStatus.PREFILLING
             with self._lock:
                 self._prefills.append((seq, handle, th))
@@ -308,6 +321,9 @@ class ServingEngine:
                 self.stats.ttfts.append(seq.time_to_first_token)
                 seq.tokens.append(first)
                 self.stats.tokens_out += 1
+            if self.tracer is not None:
+                self.tracer.emit("ttft", self._trace_track, tid=seq.sid,
+                                 ttft_s=seq.time_to_first_token)
             handle._push([first])
             if len(seq.tokens) >= seq.params.max_new_tokens:
                 with self._lock:
@@ -321,6 +337,7 @@ class ServingEngine:
     # -- decode rounds ---------------------------------------------------
     def _decode_round(self):
         cfg = self.cfg
+        tr = self.tracer
         S, R, D = cfg.max_slots, cfg.round_tokens, cfg.d_model
         inserted = []
         with self._lock:
@@ -332,6 +349,9 @@ class ServingEngine:
                     self._slots[i] = (seq, handle)
                     inserted.append(i)
                     self.stats.slot_inserts += 1
+                    self._slot_t0[i] = time.perf_counter()
+                    if tr is not None:
+                        tr.emit("slot_insert", ("slot", i), tid=seq.sid)
             occupied = [(i, s) for i, s in enumerate(self._slots)
                         if s is not None]
             self.stats.max_slots_used = max(self.stats.max_slots_used,
@@ -372,6 +392,7 @@ class ServingEngine:
             region_pin=(frozenset(cfg.decode_regions)
                         if cfg.decode_regions is not None else None),
         )
+        t_round0 = time.perf_counter()
         th = self.backend.submit(task)
         self._maybe_probe_preempt(task)
         try:
@@ -381,10 +402,17 @@ class ServingEngine:
             with self._lock:
                 for i, (seq, _h) in occupied:
                     self._slots[i] = None
+                    self._evict_trace(i, seq.sid)
                     self._settle(seq, SequenceStatus.FAILED, exc)
                 self._round_state = None
                 self.stats.decode_rounds += 1
+            if tr is not None:
+                tr.emit_span("decode_round", self._trace_track, t_round0,
+                             n_slots=len(occupied), failed=True)
             return
+        if tr is not None:
+            tr.emit_span("decode_round", self._trace_track, t_round0,
+                         n_slots=len(occupied), inserted=len(inserted))
 
         out_np = np.asarray(bufs[0])
         self._round_state = bufs[1]   # device-resident into the next round
@@ -408,7 +436,15 @@ class ServingEngine:
                 with self._lock:
                     self._slots[i] = None
                     self.stats.slot_evictions += 1
+                    self._evict_trace(i, seq.sid)
                     self._settle(seq, SequenceStatus.FINISHED)
+
+    def _evict_trace(self, slot: int, sid: int):
+        """Close the slot's occupancy span in the trace (if tracing)."""
+        t0 = self._slot_t0[slot]
+        self._slot_t0[slot] = None
+        if self.tracer is not None and t0 is not None:
+            self.tracer.emit_span("slot_busy", ("slot", slot), t0, tid=sid)
 
     def _maybe_probe_preempt(self, task: Task):
         """CI/test hook: checkpoint-preempt the round once, mid-flight."""
@@ -476,6 +512,7 @@ class ServingEngine:
             for i, s in enumerate(self._slots):
                 if s is not None:
                     self._slots[i] = None
+                    self._evict_trace(i, s[0].sid)
                     self._settle(s[0], SequenceStatus.FAILED, exc)
 
     def _strand_leftovers(self):
@@ -497,7 +534,8 @@ class ServingEngine:
             ttfts = sorted(st.ttfts)
             t0 = st.t_first_submit
             t1 = st.t_last_done
-            wall = max((t1 - t0), 1e-9) if (t0 and t1) else 0.0
+            raw_wall = (t1 - t0) if (t0 and t1) else 0.0
+            wall = max(raw_wall, 1e-9) if (t0 and t1) else 0.0
 
             def pct(vals, q):
                 if not vals:
@@ -512,7 +550,9 @@ class ServingEngine:
                 "n_cancelled": st.n_cancelled,
                 "stranded_sequences": st.stranded,
                 "tokens_out": st.tokens_out,
-                "tokens_per_s": st.tokens_out / wall if wall else 0.0,
+                # rate over the RAW wall: an instant serving window (t0 ==
+                # t1 at clock resolution) reports 0.0, never a 1e9 rate
+                "tokens_per_s": safe_rate(st.tokens_out, raw_wall),
                 "wall_s": wall,
                 "ttft_p50_s": pct(ttfts, 0.50),
                 "ttft_p99_s": pct(ttfts, 0.99),
@@ -526,4 +566,5 @@ class ServingEngine:
                 "state_device_rounds": st.state_device_rounds,
                 "engine_mode": getattr(getattr(self.backend, "shell", None),
                                        "engine_mode", None),
+                "trace": trace_section(self.tracer),
             })

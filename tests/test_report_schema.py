@@ -65,3 +65,44 @@ def test_serving_report_documented():
     engine = ServingEngine(_NullBackend(), ServingConfig())
     rep = engine.report()
     _check("serving", rep)
+
+
+def test_trace_section_schema():
+    """The ``trace`` key: ``{enabled: False}`` untraced; under a tracer it
+    carries the recorder counters plus every derived-metrics section the
+    schema doc promises (per-task breakdown, preempt response, regions,
+    ICAP) — still as ONE documented top-level key."""
+    from repro.controller.kernels import get_kernel
+    from repro.core.scheduler import Scheduler, SchedulerConfig
+    from repro.core.shell import Shell
+    from repro.core.task import Task
+    from repro.kernels.blur.tasks import make_image
+    from repro.obs import Tracer
+
+    rng = np.random.default_rng(1)
+    img = make_image(rng, 16)
+    kd = get_kernel("MedianBlur")
+    shell = Shell(n_regions=1, chunk_budget=2, prefetch=False,
+                  tracer=Tracer())
+    try:
+        t = Task(kernel="MedianBlur",
+                 args=kd.bundle(img, np.zeros_like(img), H=16, W=16,
+                                iters=1))
+        rep = Scheduler(shell, SchedulerConfig()).run([t], quiet=True)
+    finally:
+        shell.shutdown()
+    _check("scheduler", rep)
+    tr = rep["trace"]
+    assert tr["enabled"] is True
+    for key in ("capacity", "emitted", "dropped", "n_events", "kinds",
+                "per_task", "preempt_response", "regions", "icap"):
+        assert key in tr, key
+    assert tr["per_task"]["n_tasks"] == 1
+
+    # untraced runs keep the key but flag it disabled
+    shell2 = Shell(n_regions=1, chunk_budget=2, prefetch=False)
+    try:
+        rep2 = Scheduler(shell2, SchedulerConfig()).report()
+    finally:
+        shell2.shutdown()
+    assert rep2["trace"] == {"enabled": False}

@@ -1,0 +1,163 @@
+#!/usr/bin/env python
+"""Summarize (or diff) flight-recorder traces from ``--trace-out``.
+
+The serve drivers write Chrome-trace-event JSON (DESIGN.md §11); Perfetto
+renders it, but CI logs and terminal triage want numbers.  This tool reads
+the same file back and prints the headline timeline facts:
+
+    python tools/trace_report.py trace.json            # summarize one
+    python tools/trace_report.py before.json after.json  # diff two
+
+Summary: event counts per kind, wall window, per-track busy time (sum of
+span durations per pid/tid thread), and preemption response latency
+re-derived from the ``preempt_request``/``preempt_honored`` instants —
+independently of the producing process, so a trace file alone is enough
+to audit a run.  Diff: the same facts for both files, with deltas.
+
+Works on any conforming Chrome trace, not just ours: unknown event names
+are counted, metadata records ("M") name the tracks.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+
+def load_trace(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    if isinstance(data, list):           # bare-array Chrome trace variant
+        data = {"traceEvents": data}
+    if "traceEvents" not in data:
+        raise ValueError(f"{path}: not a Chrome trace (no traceEvents)")
+    return data
+
+
+def summarize(trace: dict) -> dict:
+    """Reduce a Chrome trace to comparable scalars (all times seconds)."""
+    events = trace["traceEvents"]
+    track_names = {}                     # (pid, tid) -> display name
+    proc_names = {}                      # pid -> display name
+    counts = defaultdict(int)
+    busy = defaultdict(float)            # (pid, tid) -> busy seconds
+    t_min, t_max = None, None
+    pending = {}                         # (pid, tid) -> preempt request ts
+    responses = []
+    for e in events:
+        ph = e.get("ph")
+        if ph == "M":
+            if e.get("name") == "thread_name":
+                track_names[(e["pid"], e.get("tid", 0))] = \
+                    e["args"].get("name", "?")
+            elif e.get("name") == "process_name":
+                proc_names[e["pid"]] = e["args"].get("name", "?")
+            continue
+        name = e.get("name", "?")
+        counts[name] += 1
+        ts = e.get("ts", 0.0) / 1e6
+        dur = e.get("dur", 0.0) / 1e6 if ph == "X" else 0.0
+        t_min = ts if t_min is None else min(t_min, ts)
+        t_max = max(t_max if t_max is not None else ts, ts + dur)
+        key = (e.get("pid", 0), e.get("tid", 0))
+        if ph == "X":
+            busy[key] += dur
+        # re-derive preempt response straight from the instants: a "done"
+        # on the same track moots an unhonored request (the scheduler
+        # cancels stale requests the same way)
+        if name == "preempt_request":
+            pending.setdefault(key, ts)
+        elif name == "preempt_honored" and key in pending:
+            responses.append(ts - pending.pop(key))
+        elif name == "done":
+            pending.pop(key, None)
+    wall = (t_max - t_min) if (t_min is not None) else 0.0
+    tracks = {}
+    for key, b in sorted(busy.items()):
+        label = track_names.get(key, f"pid{key[0]}/tid{key[1]}")
+        proc = proc_names.get(key[0], "")
+        tracks[f"{proc}:{label}" if proc else label] = {
+            "busy_s": b,
+            "busy_frac": (b / wall) if wall > 0 else 0.0,
+        }
+    return {
+        "n_events": sum(counts.values()),
+        "wall_s": wall,
+        "kinds": dict(sorted(counts.items())),
+        "tracks": tracks,
+        "preempt_response": {
+            "n": len(responses),
+            "mean_s": (sum(responses) / len(responses)) if responses else 0.0,
+            "max_s": max(responses) if responses else 0.0,
+            "unmatched": len(pending),
+        },
+    }
+
+
+def _fmt_s(x: float) -> str:
+    return f"{x * 1e3:.2f}ms" if x < 1.0 else f"{x:.3f}s"
+
+
+def print_summary(path: str, s: dict, out=sys.stdout):
+    w = out.write
+    w(f"{path}: {s['n_events']} events over {_fmt_s(s['wall_s'])}\n")
+    w("  events by kind:\n")
+    for name, n in sorted(s["kinds"].items(), key=lambda kv: -kv[1]):
+        w(f"    {name:<18} {n}\n")
+    w("  track busy time:\n")
+    for label, t in s["tracks"].items():
+        w(f"    {label:<24} {_fmt_s(t['busy_s']):>10}  "
+          f"({t['busy_frac']:.0%} of wall)\n")
+    pr = s["preempt_response"]
+    if pr["n"] or pr["unmatched"]:
+        w(f"  preempt response: n={pr['n']} mean={_fmt_s(pr['mean_s'])} "
+          f"max={_fmt_s(pr['max_s'])} unmatched={pr['unmatched']}\n")
+
+
+def print_diff(pa: str, a: dict, pb: str, b: dict, out=sys.stdout):
+    w = out.write
+    w(f"diff {pa} -> {pb}\n")
+    w(f"  events: {a['n_events']} -> {b['n_events']} "
+      f"({b['n_events'] - a['n_events']:+d})\n")
+    w(f"  wall:   {_fmt_s(a['wall_s'])} -> {_fmt_s(b['wall_s'])} "
+      f"({b['wall_s'] - a['wall_s']:+.3f}s)\n")
+    w("  events by kind (changed only):\n")
+    for name in sorted(set(a["kinds"]) | set(b["kinds"])):
+        na, nb = a["kinds"].get(name, 0), b["kinds"].get(name, 0)
+        if na != nb:
+            w(f"    {name:<18} {na} -> {nb} ({nb - na:+d})\n")
+    ra, rb = a["preempt_response"], b["preempt_response"]
+    if ra["n"] or rb["n"]:
+        w(f"  preempt response mean: {_fmt_s(ra['mean_s'])} -> "
+          f"{_fmt_s(rb['mean_s'])}\n")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="trace_report",
+        description="summarize or diff flight-recorder Chrome traces")
+    ap.add_argument("traces", nargs="+",
+                    help="one trace to summarize, or two to diff")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the summary (or both summaries) as JSON")
+    args = ap.parse_args(argv)
+    if len(args.traces) > 2:
+        ap.error("pass one trace (summarize) or two (diff)")
+    summaries = [(p, summarize(load_trace(p))) for p in args.traces]
+    if args.json:
+        json.dump({p: s for p, s in summaries}, sys.stdout, indent=2)
+        sys.stdout.write("\n")
+        return 0
+    if len(summaries) == 1:
+        print_summary(*summaries[0])
+    else:
+        (pa, a), (pb, b) = summaries
+        print_summary(pa, a)
+        print_summary(pb, b)
+        print_diff(pa, a, pb, b)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
