@@ -220,7 +220,7 @@ class RegionPool:
             (time.perf_counter(), "grow", region.rid, self.n_active))
         tr = getattr(self.shell, "tracer", None)
         if tr is not None:
-            tr.emit("pool_resize", ("pool", 0), kind="grow",
+            tr.emit("pool_resize", ("pool", 0), direction="grow",
                     rid=region.rid, n_regions=self.n_active)
         self.replan(footprints if footprints is not None else [width])
         return region
@@ -285,7 +285,7 @@ class RegionPool:
                 (time.perf_counter(), "shrink", rid, self.n_active))
             tr = getattr(self.shell, "tracer", None)
             if tr is not None:
-                tr.emit("pool_resize", ("pool", 0), kind="shrink",
+                tr.emit("pool_resize", ("pool", 0), direction="shrink",
                         rid=rid, n_regions=self.n_active)
             if scheduler is not None:
                 scheduler._dead_since.pop(rid, None)

@@ -60,11 +60,11 @@ def export_chrome_trace(source: Union[Tracer, Iterable[TraceEvent]],
                                              default=0.0)
         other = {}
 
-    tracks = sorted({e.track for e in events},
-                    key=lambda tr: (_track_key(str(tr[0])), tr[1:]))
+    tracks = sorted({e.track for e in events}, key=_instance_key)
     pid_of = {}
     for tr in tracks:
         pid_of.setdefault(str(tr[0]), len(pid_of) + 1)
+    tid_of = _assign_tids(tracks)
 
     out = []
     for ttype in sorted(pid_of, key=_track_key):
@@ -75,7 +75,7 @@ def export_chrome_trace(source: Union[Tracer, Iterable[TraceEvent]],
         ttype = str(tr[0])
         inst = tr[1] if len(tr) > 1 else 0
         out.append({"ph": "M", "name": "thread_name",
-                    "pid": pid_of[ttype], "tid": _tid(tr),
+                    "pid": pid_of[ttype], "tid": tid_of[tr],
                     "args": {"name": f"{ttype} {inst}"}})
 
     for e in events:
@@ -83,7 +83,7 @@ def export_chrome_trace(source: Union[Tracer, Iterable[TraceEvent]],
         if e.tid is not None:
             args["task"] = e.tid
         rec = {"name": e.kind, "cat": str(e.track[0]),
-               "pid": pid_of[str(e.track[0])], "tid": _tid(e.track),
+               "pid": pid_of[str(e.track[0])], "tid": tid_of[e.track],
                "ts": (e.t - base) * 1e6}
         if args:
             rec["args"] = args
@@ -104,12 +104,34 @@ def export_chrome_trace(source: Union[Tracer, Iterable[TraceEvent]],
     return doc
 
 
-def _tid(track: tuple) -> int:
-    """Numeric thread id for a track instance (Chrome tids are ints)."""
-    inst = track[1] if len(track) > 1 else 0
-    if isinstance(inst, bool):
-        return int(inst)
-    if isinstance(inst, int):
-        return inst
-    # Non-int instance ids (e.g. node names) hash to a stable small int.
-    return sum(ord(c) for c in str(inst)) % 997
+def _instance_key(track: tuple) -> tuple:
+    """Total order over tracks even when instance ids mix ints and strings
+    within one track type (ints first, numerically; then strings)."""
+    return (_track_key(str(track[0])),
+            [(1, 0, str(i)) if isinstance(i, bool) or not isinstance(i, int)
+             else (0, i, "") for i in track[1:]])
+
+
+def _assign_tids(tracks: "list[tuple]") -> dict:
+    """Unique Chrome tid per track instance within its pid.
+
+    Int instances keep their value (region 3 renders as tid 3); everything
+    else (e.g. node-name strings) takes the next free counter value within
+    the pid, so distinct instances can never merge into one Perfetto row.
+    """
+    tid_of, used = {}, {}
+    for tr in tracks:
+        inst = tr[1] if len(tr) > 1 else 0
+        if isinstance(inst, int) and not isinstance(inst, bool):
+            tid_of[tr] = inst
+            used.setdefault(str(tr[0]), set()).add(inst)
+    for tr in tracks:
+        if tr in tid_of:
+            continue
+        taken = used.setdefault(str(tr[0]), set())
+        n = 0
+        while n in taken:
+            n += 1
+        taken.add(n)
+        tid_of[tr] = n
+    return tid_of

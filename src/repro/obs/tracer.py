@@ -62,16 +62,23 @@ class Tracer:
 
     # -- recording ---------------------------------------------------------
 
-    def emit(self, kind: str, track: tuple, tid: Optional[int] = None,
+    def emit(self, kind: str, track: tuple, /, tid: Optional[int] = None,
              t: Optional[float] = None, dur: float = 0.0, **attrs) -> None:
-        """Record one event.  ``t`` defaults to *now* (instants)."""
+        """Record one event.  ``t`` defaults to *now* (instants).
+
+        ``kind`` and ``track`` are positional-only so an attr that happens
+        to share their name (e.g. ``kind="grow"``) lands in ``attrs``
+        instead of raising ``TypeError: multiple values for argument``.
+        Attrs named ``tid``/``t``/``dur`` still bind to the parameters —
+        pick different attr names for those.
+        """
         ev = TraceEvent(t if t is not None else time.perf_counter(),
                         kind, track, tid, dur, attrs or None)
         with self._lock:
             self._ring.append(ev)
             self.n_emitted += 1
 
-    def emit_span(self, kind: str, track: tuple, t_start: float,
+    def emit_span(self, kind: str, track: tuple, t_start: float, /,
                   tid: Optional[int] = None, t_end: Optional[float] = None,
                   **attrs) -> None:
         """Record a span from ``t_start`` to ``t_end`` (default *now*)."""

@@ -16,6 +16,7 @@ import pytest
 
 from repro.controller.kernels import get_kernel
 from repro.core.interrupts import EventKind
+from repro.core.pool import RegionPool
 from repro.core.reporting import safe_rate
 from repro.core.scheduler import Scheduler, SchedulerConfig
 from repro.core.shell import Shell
@@ -81,6 +82,38 @@ def test_span_duration_never_negative():
     assert tr.events()[0].dur == 0.0
 
 
+def test_emit_attrs_cannot_shadow_kind_or_track():
+    """``kind``/``track`` are positional-only: attrs with those names land
+    in the event's attrs dict instead of raising TypeError."""
+    tr = Tracer()
+    tr.emit("resize", ("pool", 0), kind="grow", track="x")
+    ev = tr.events()[0]
+    assert ev.kind == "resize" and ev.track == ("pool", 0)
+    assert ev.attrs == {"kind": "grow", "track": "x"}
+
+
+def test_pool_resize_events_traced():
+    """Regression: a traced Shell with a RegionPool must record grow and
+    shrink as ``pool_resize`` events (a ``kind=`` keyword collision in the
+    emit call used to raise TypeError inside the autoscale path)."""
+    tracer = Tracer()
+    shell = Shell(n_regions=2, devices=[object() for _ in range(4)],
+                  tracer=tracer)
+    pool = RegionPool(shell, min_regions=1, max_regions=3)
+    try:
+        region = pool.grow()
+        assert region is not None
+        pool.begin_retire(region)  # idle -> drains immediately
+        assert pool.finalize_retirements() == [region.rid]
+    finally:
+        shell.shutdown()
+    evs = [e for e in tracer.events() if e.kind == "pool_resize"]
+    assert [e.attrs["direction"] for e in evs] == ["grow", "shrink"]
+    assert all(e.track == ("pool", 0) for e in evs)
+    assert evs[0].attrs["rid"] == region.rid == evs[1].attrs["rid"]
+    assert evs[0].attrs["n_regions"] == 3 and evs[1].attrs["n_regions"] == 2
+
+
 # -------------------------------------------------------- export + derive
 def test_export_and_derive_on_empty_tracer(tmp_path):
     tr = Tracer()
@@ -118,6 +151,30 @@ def test_export_chrome_trace_structure(tmp_path):
     assert run["dur"] == pytest.approx(10_000, rel=0.01)
     assert all(e["ts"] >= 0 for e in spans + instants)
     assert out["otherData"]["events_dropped"] == 0
+
+
+def test_export_string_track_instances_get_unique_tids():
+    """Distinct non-int instance ids must never share a Chrome tid within
+    a pid (the old ord-sum hash merged anagram node names into one row),
+    and counter-assigned tids must not collide with int instances."""
+    tr = Tracer()
+    tr.emit("hb", ("node", "node-ab"))
+    tr.emit("hb", ("node", "node-ba"))  # anagram: equal ord-sum
+    tr.emit("hb", ("node", 0))          # int instance keeps tid 0
+    doc = export_chrome_trace(tr)
+    metas = [e for e in doc["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "thread_name"]
+    name_of = {m["tid"]: m["args"]["name"] for m in metas}
+    assert len(name_of) == 3  # three rows, three distinct tids
+    assert name_of[0] == "node 0"
+    # events land on the row named after their own instance
+    for e in doc["traceEvents"]:
+        if e["ph"] == "i":
+            assert name_of[e["tid"]].startswith("node")
+    tids = {next(m["tid"] for m in metas
+                 if m["args"]["name"] == f"node {inst}")
+            for inst in ("node-ab", "node-ba", 0)}
+    assert len(tids) == 3
 
 
 # --------------------------------------------- traced bursty two-region run
