@@ -125,7 +125,7 @@ def run_seed_arm(preempt_every: int = 0, *, size: int = 64, iters: int = 48,
 def run_pipeline_arm(pipeline: bool, preempt_every: int = 0, *,
                      engine: str = None, migrate: bool = False,
                      size: int = 64, iters: int = 48, seed: int = 5,
-                     tracer=None) -> dict:
+                     tracer=None, metrics=None) -> dict:
     """One microbench arm: a single MedianBlur task driven chunk by chunk
     on a region (budget 1 → one row block per chunk), with optional forced
     preemption every ``preempt_every`` chunks, resuming on the *other*
@@ -146,7 +146,7 @@ def run_pipeline_arm(pipeline: bool, preempt_every: int = 0, *,
     task, bundle = _pipeline_task(seed, size, iters)
     n_regions = 2 if migrate else 1
     shell = Shell(n_regions=n_regions, chunk_budget=1, engine=engine,
-                  prefetch=False, tracer=tracer)
+                  prefetch=False, tracer=tracer, metrics=metrics)
     try:
         for r in shell.regions:  # bitstreams warm: measure dispatch, not
             shell.engine.prewarm("MedianBlur", bundle, r.geometry,  # compile
@@ -456,5 +456,89 @@ def measure_tracer_overhead(printer=print,
     assert result["gate"]["pass"], (
         f"tracer overhead exceeds the gate (<= {TRACER_GATE_DELTA:.0%} "
         f"relative or <= {TRACER_ABS_FLOOR_US}us/chunk absolute): "
+        f"{json.dumps(result['arms'])}")
+    return result
+
+
+# live-metrics registry (DESIGN.md §12): same budget as the tracer — an
+# instrumented dispatch path must stay within 2% of the bare one, or
+# within the same absolute noise floor for tiny per-chunk walls
+METRICS_GATE_DELTA = 0.02
+METRICS_ABS_FLOOR_US = 2.0
+
+
+def measure_metrics_overhead(printer=print,
+                             cache_path: str = "bench_metrics_overhead.json",
+                             use_cache: bool = True, repeats: int = 6,
+                             size: int = 64, iters: int = 96) -> dict:
+    """The live-metrics registry's dispatch-path cost (DESIGN.md §12):
+    the pipelined chunk microbench run metrics-off vs metrics-on (fresh
+    ``MetricsRegistry`` per repeat, so every region counter/histogram
+    update really lands), at zero and heavy preemption rates — the
+    mirror of ``measure_tracer_overhead``.
+
+    The gate requires the instrumented arm's per-chunk wall within
+    ``METRICS_GATE_DELTA`` (2%) of the bare arm's, or within
+    ``METRICS_ABS_FLOOR_US`` absolute: a few counter increments under
+    uncontended locks must stay invisible next to a chunk dispatch.
+    Min-of-repeats with the arms *interleaved* (off, on, off, on, ...)
+    filters scheduler jitter AND slow environmental drift — back-to-back
+    blocks of one arm would fold any machine-state change between the
+    blocks into the delta."""
+    from repro.obs import MetricsRegistry
+
+    if use_cache and os.path.exists(cache_path):
+        with open(cache_path) as f:
+            result = json.load(f)
+    else:
+        arm_specs = {"none": 0, "heavy": 12}
+        arms = {}
+        for arm_name, preempt_every in arm_specs.items():
+            best_off, best_on, series = None, None, 0
+            for _ in range(repeats):
+                off = run_pipeline_arm(True, preempt_every, size=size,
+                                       iters=iters)
+                if best_off is None or off["wall_s"] < best_off["wall_s"]:
+                    best_off = off
+                reg = MetricsRegistry()
+                on = run_pipeline_arm(True, preempt_every, size=size,
+                                      iters=iters, metrics=reg)
+                if best_on is None or on["wall_s"] < best_on["wall_s"]:
+                    best_on = on
+                    series = reg.n_series()
+            off_us = best_off["us_per_chunk"]
+            on_us = best_on["us_per_chunk"]
+            delta = (on_us - off_us) / max(off_us, 1e-9)
+            arms[arm_name] = {
+                "bare_us_per_chunk": off_us,
+                "metered_us_per_chunk": on_us,
+                "delta_ratio": delta,
+                "delta_us": on_us - off_us,
+                "chunks": best_on["chunks"],
+                "series_recorded": series,
+                "pass": bool(delta <= METRICS_GATE_DELTA
+                             or (on_us - off_us) <= METRICS_ABS_FLOOR_US),
+            }
+        result = {
+            "config": {"size": size, "iters": iters, "repeats": repeats},
+            "arms": arms,
+            "gate": {"delta_threshold": METRICS_GATE_DELTA,
+                     "abs_floor_us": METRICS_ABS_FLOOR_US,
+                     "pass": all(a["pass"] for a in arms.values())},
+        }
+        with open(cache_path, "w") as f:
+            json.dump(result, f, indent=1)
+    printer("# metrics overhead: metered vs bare pipelined dispatch "
+            "(name,us_per_call,derived)")
+    for name, a in result["arms"].items():
+        printer(f"metrics_overhead/{name},{a['metered_us_per_chunk']:.0f},"
+                f"bare_us={a['bare_us_per_chunk']:.0f};"
+                f"delta_ratio={a['delta_ratio']:.4f};"
+                f"delta_us={a['delta_us']:.1f};"
+                f"series={a['series_recorded']};"
+                f"gate<={METRICS_GATE_DELTA}")
+    assert result["gate"]["pass"], (
+        f"metrics overhead exceeds the gate (<= {METRICS_GATE_DELTA:.0%} "
+        f"relative or <= {METRICS_ABS_FLOOR_US}us/chunk absolute): "
         f"{json.dumps(result['arms'])}")
     return result

@@ -15,18 +15,11 @@ import warnings
 
 warnings.filterwarnings("ignore")
 
-# every cached bench artifact the consolidated summary sweeps up
-_BENCH_ARTIFACTS = (
-    "bench_reconfig.json",
-    "bench_prefetch.json",
-    "bench_chunk_pipeline.json",
-    "bench_tracer_overhead.json",
-    "bench_policies.json",
-    "bench_elastic.json",
-    "bench_cluster.json",
-    "bench_decode.json",
-    "bench_sweep.json",
-)
+# The consolidated summary sweeps up every ``bench_*.json`` on disk (see
+# ``write_summary``), so a new bench arm only has to write its artifact —
+# no registration list to keep in sync, and a ``--fast`` run that skips
+# most arms still republishes every previously-cached artifact instead of
+# shrinking the summary to the one bench it ran.
 
 
 def _headline(d, prefix="", depth=0):
@@ -49,13 +42,21 @@ def _headline(d, prefix="", depth=0):
 
 def write_summary(path: str = "BENCH_SUMMARY.json",
                   printer=print) -> dict:
-    """Consolidate every cached ``bench_*.json`` headline into one
-    artifact, stamped with the git sha and a timestamp, so CI publishes a
-    single comparable file per run instead of nine."""
+    """Consolidate every ``bench_*.json`` on disk into one artifact.
+
+    A ``--fast`` run only regenerates a subset of benches; globbing (vs a
+    fixed artifact list) republishes every cached artifact too, so the
+    summary never shrinks to ``n_benches: 1``.  Each entry carries its
+    own provenance — the artifact's embedded git sha/timestamp when it
+    recorded one, its file mtime otherwise — so a summary mixing a fresh
+    arm with stale cached ones says exactly which is which."""
+    import glob
     import json
-    import os
     import subprocess
     import time
+
+    def _utc(epoch: float) -> str:
+        return time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime(epoch))
 
     sha = None
     try:
@@ -65,21 +66,27 @@ def write_summary(path: str = "BENCH_SUMMARY.json",
     except (OSError, subprocess.SubprocessError):
         pass
     benches = {}
-    for name in _BENCH_ARTIFACTS:
-        if not os.path.exists(name):
-            continue
+    for name in sorted(glob.glob("bench_*.json")):
         try:
+            import os
+            mtime = os.path.getmtime(name)
             with open(name) as f:
                 data = json.load(f)
         except (OSError, ValueError):
             continue
         if isinstance(data, list):  # the sweep is a row list: count only
-            benches[name] = {"n_rows": len(data)}
+            entry = {"n_rows": len(data)}
+            embedded_sha = embedded_ts = None
         else:
-            benches[name] = _headline(data)
+            entry = _headline(data)
+            embedded_sha = data.get("git_sha")
+            embedded_ts = data.get("timestamp")
+        entry["artifact_git_sha"] = embedded_sha or sha
+        entry["artifact_timestamp"] = embedded_ts or _utc(mtime)
+        benches[name] = entry
     summary = {
         "git_sha": sha,
-        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "timestamp": _utc(time.time()),
         "n_benches": len(benches),
         "benches": benches,
     }
@@ -127,6 +134,13 @@ def main() -> None:
         print("tracer_overhead/skipped,0,fast-mode")
     else:
         bench_overhead.measure_tracer_overhead(use_cache=not args.no_cache)
+
+    # live-metrics registry overhead gate (metered vs bare dispatch,
+    # DESIGN.md §12); same fast-mode caching contract
+    if args.fast and not os.path.exists("bench_metrics_overhead.json"):
+        print("metrics_overhead/skipped,0,fast-mode")
+    else:
+        bench_overhead.measure_metrics_overhead(use_cache=not args.no_cache)
 
     # scheduling-policy arm (fcfs vs edf vs wfq on one stream); like the
     # sweep, fast mode only reports it when already cached

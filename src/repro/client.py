@@ -166,6 +166,20 @@ class Client:
         shell kwarg), or ``None`` when tracing is off."""
         return getattr(self.backend, "tracer", None)
 
+    @property
+    def metrics(self):
+        """The live metrics registry threaded through the backend
+        (``metrics=`` shell kwarg), or ``None`` when telemetry is off."""
+        return getattr(self.backend, "metrics", None)
+
+    @property
+    def alerts(self) -> list:
+        """Currently-firing alerts from the attached ``TelemetryMonitor``
+        (empty when telemetry is off or no monitor is sampling)."""
+        reg = self.metrics
+        mon = getattr(reg, "monitor", None) if reg is not None else None
+        return mon.alerts() if mon is not None else []
+
     def report(self) -> dict:
         """The backend's versioned report (layer ``scheduler`` or
         ``cluster``; see ``core/reporting.py``)."""

@@ -224,12 +224,15 @@ class ClusterFrontend:
                  spill_dir: Optional[str] = None,
                  start: bool = True,
                  tracer=None,
+                 metrics=None,
                  **shell_kwargs):
         # flight recorder (obs/, DESIGN.md §11): ONE shared handle for the
         # whole fabric — every node shell emits into the same timeline as
         # the frontend's route/migrate/failover events, so a cross-shell
-        # migration reads as one contiguous story in the trace.
+        # migration reads as one contiguous story in the trace.  The live
+        # metrics registry (obs/registry.py, §12) threads identically.
         self.tracer = tracer
+        self.metrics = metrics
         self._trace_track = ("cluster", 0)
         if nodes is not None:
             self.nodes: List[ClusterNode] = list(nodes)
@@ -237,6 +240,11 @@ class ClusterFrontend:
                 self.tracer = next(
                     (t for t in (getattr(n.shell, "tracer", None)
                                  for n in self.nodes) if t is not None),
+                    None)
+            if metrics is None:  # adopt a registry the shells carry
+                self.metrics = next(
+                    (m for m in (getattr(n.shell, "metrics", None)
+                                 for n in self.nodes) if m is not None),
                     None)
         else:
             if n_shells < 1:
@@ -247,6 +255,7 @@ class ClusterFrontend:
                     config=replace(config) if config is not None else None,
                     power=(power_models[i] if power_models else None),
                     tracer=tracer,
+                    metrics=metrics,
                     **shell_kwargs)
                 for i in range(n_shells)]
         self.router: RouterPolicy = (
@@ -362,6 +371,9 @@ class ClusterFrontend:
             if self.tracer is not None:
                 self.tracer.emit("route", self._trace_track, tid=task.tid,
                                  node=node.node_id)
+            if self.metrics is not None:
+                self.metrics.counter("cluster_routes_total",
+                                     node=node.node_id).inc()
             rec = _Record(tid=task.tid, task=task, frontend=self,
                           node=node, inner=None,
                           t_submit=time.perf_counter())
@@ -649,6 +661,8 @@ class ClusterFrontend:
                 self.migrations_completed += 1
             else:
                 rec.n_failovers += 1
+            if self.metrics is not None:
+                self.metrics.counter("cluster_%ss_total" % kind).inc()
             return True
 
     # -- monitor: handle resolution, heartbeats, failover, rebalance -----
@@ -757,6 +771,9 @@ class ClusterFrontend:
             self.tracer.emit("failover", self._trace_track,
                              node=node.node_id, readmitted=readmitted,
                              resumed=resumed)
+        if self.metrics is not None:
+            self.metrics.counter("cluster_failover_events_total",
+                                 node=node.node_id).inc()
 
     def _recover_committed(self, rec: _Record,
                            node: ClusterNode) -> Optional[Committed]:
@@ -847,6 +864,7 @@ class ClusterFrontend:
             })
         from repro.core.reporting import safe_rate, stamp
         from repro.obs.metrics import trace_section
+        from repro.obs.slo import telemetry_section
 
         pct = Scheduler._percentile   # same nearest-rank estimator as the
         return stamp("cluster", {     # per-shell reports
@@ -860,6 +878,7 @@ class ClusterFrontend:
             # (wall == 0) emits 0.0, not an inf-like 1e9-scale rate
             "throughput_tps": safe_rate(counters["n_done"], raw_wall),
             "trace": trace_section(self.tracer),
+            "telemetry": telemetry_section(self.metrics),
             "turnaround_p50_s": pct(turnarounds, 0.50),
             "turnaround_p99_s": pct(turnarounds, 0.99),
             "lost_tasks": counters["n_failed"],

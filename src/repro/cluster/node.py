@@ -133,6 +133,11 @@ class ClusterNode:
         """The shared flight recorder, if the shell carries one."""
         return getattr(self.shell, "tracer", None)
 
+    @property
+    def metrics(self):
+        """The shared live-metrics registry, if the shell carries one."""
+        return getattr(self.shell, "metrics", None)
+
     def inject_failure(self) -> None:
         """Kill the whole node: every region fails (the scheduler loop
         notices the dead fabric, fails outstanding handles and exits)."""

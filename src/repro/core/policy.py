@@ -32,6 +32,7 @@ import bisect
 import heapq
 import itertools
 import math
+import time
 from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -170,8 +171,9 @@ class SchedulingPolicy:
     def peek_for_prefetch(self, k: int) -> List[Task]:
         raise NotImplementedError
 
-    def peek_same_bitstream(self, matches, region,
-                            window: int) -> Optional[Task]:
+    def peek_same_bitstream(self, matches, region, window: int,
+                            max_skip_wait_s: Optional[float] = None
+                            ) -> Optional[Task]:
         """Same-bitstream coalescing lookahead (DESIGN.md §8.3): a queued
         task for which ``matches(task)`` is true (same executable key as
         the region's loaded bitstream) and which fits ``region``, reachable
@@ -180,7 +182,10 @@ class SchedulingPolicy:
         order for edf, tenant fairness for wfq.  Only the order *within*
         one equivalence class (level / background set / tenant FIFO) may be
         bent, bounded by ``window`` — the serving analogue of continuous
-        batching.  Must not mutate the queues; the scheduler removes the
+        batching.  ``max_skip_wait_s`` is the starvation bound: a match
+        must never jump a skipped fitting task whose queue wait already
+        exceeds it (a coalesced stream would otherwise renew the skip
+        forever).  Must not mutate the queues; the scheduler removes the
         returned task with ``take``.  Default: no coalescing."""
         return None
 
@@ -270,23 +275,34 @@ class FcfsPriority(SchedulingPolicy):
                     return out
         return out
 
-    def peek_same_bitstream(self, matches, region, window):
+    def peek_same_bitstream(self, matches, region, window,
+                            max_skip_wait_s=None):
         # strict priority is never bent: scan levels top-down and stop at
         # the first level owning a task that fits this region.  Within that
         # level, a same-bitstream task up to ``window`` positions deep may
         # jump the (same-priority) FIFO — the continuous-batching move.  A
         # level whose window holds no region-fitting task is skipped, the
-        # same placement rule ``select`` applies to blocked heads.
+        # same placement rule ``select`` applies to blocked heads.  A jump
+        # is REFUSED once any skipped fitting task is already starving
+        # (queue wait beyond ``max_skip_wait_s``): a steady same-bitstream
+        # stream would otherwise coalesce past that head indefinitely.
+        now = time.perf_counter() if max_skip_wait_s is not None else 0.0
         for q in self._queues:
             fitting_seen = False
+            starving_skipped = False
             for i, t in enumerate(q.iter_live()):
                 if i >= window:
                     break
                 if not region_fits(t, region):
                     continue
                 if matches(t):
+                    if starving_skipped:
+                        return None  # the starving head dispatches first
                     return t
                 fitting_seen = True
+                if (max_skip_wait_s is not None and t.t_arrived is not None
+                        and now - t.t_arrived > max_skip_wait_s):
+                    starving_skipped = True
             if fitting_seen:
                 return None  # this level's head must dispatch normally
         return None
@@ -392,7 +408,8 @@ class EarliestDeadlineFirst(SchedulingPolicy):
                 if e[3].status is not TaskStatus.CANCELLED)
         return [e[3] for e in heapq.nsmallest(k, live)]
 
-    def peek_same_bitstream(self, matches, region, window):
+    def peek_same_bitstream(self, matches, region, window,
+                            max_skip_wait_s=None):
         # deadline order is never bent: a match qualifies only when every
         # region-fitting task ahead of it (earlier deadline) is background
         # (``deadline_s is None`` sorts to +inf, so in practice only
@@ -400,15 +417,22 @@ class EarliestDeadlineFirst(SchedulingPolicy):
         # deadline-bearing task is never skipped for a coalescing win).
         live = (e for e in self._heap
                 if e[3].status is not TaskStatus.CANCELLED)
+        now = (time.perf_counter() if max_skip_wait_s is not None else 0.0)
         ahead_has_deadline = False
+        starving_skipped = False
         for e in heapq.nsmallest(window, live):
             t = e[3]
             if not region_fits(t, region):
                 continue
             if matches(t):
-                return None if ahead_has_deadline else t
+                if ahead_has_deadline or starving_skipped:
+                    return None
+                return t
             if t.deadline_s is not None:
                 ahead_has_deadline = True
+            if (max_skip_wait_s is not None and t.t_arrived is not None
+                    and now - t.t_arrived > max_skip_wait_s):
+                starving_skipped = True
         return None
 
     def take(self, task):
@@ -537,24 +561,32 @@ class WeightedFairShare(SchedulingPolicy):
                 break
         return out
 
-    def peek_same_bitstream(self, matches, region, window):
+    def peek_same_bitstream(self, matches, region, window,
+                            max_skip_wait_s=None):
         # tenant fairness is never bent: only the tenant whose turn it is
         # (minimum virtual time — exactly who ``select`` would serve) may
         # coalesce, and ``take`` charges its virtual clock like any other
-        # dispatch.  Only that tenant's own FIFO is bent, window-bounded.
+        # dispatch.  Only that tenant's own FIFO is bent, window-bounded,
+        # and never past a starving same-tenant head (the fcfs rule).
         backlogged = self._backlogged()
         if not backlogged:
             return None
         tenant = min(backlogged, key=lambda t: (self._vt.get(t, 0.0), t))
+        now = (time.perf_counter() if max_skip_wait_s is not None else 0.0)
         n = 0
+        starving_skipped = False
         for t in self._queues[tenant]:
             if t.status is TaskStatus.CANCELLED:
                 continue
             if n >= window:
                 break
             n += 1
-            if region_fits(t, region) and matches(t):
-                return t
+            if region_fits(t, region):
+                if matches(t):
+                    return None if starving_skipped else t
+                if (max_skip_wait_s is not None and t.t_arrived is not None
+                        and now - t.t_arrived > max_skip_wait_s):
+                    starving_skipped = True
         return None
 
     def take(self, task):

@@ -222,6 +222,9 @@ class RegionPool:
         if tr is not None:
             tr.emit("pool_resize", ("pool", 0), direction="grow",
                     rid=region.rid, n_regions=self.n_active)
+        m = getattr(self.shell, "metrics", None)
+        if m is not None:
+            m.counter("pool_resizes_total", direction="grow").inc()
         self.replan(footprints if footprints is not None else [width])
         return region
 
@@ -287,6 +290,9 @@ class RegionPool:
             if tr is not None:
                 tr.emit("pool_resize", ("pool", 0), direction="shrink",
                         rid=rid, n_regions=self.n_active)
+            m = getattr(self.shell, "metrics", None)
+            if m is not None:
+                m.counter("pool_resizes_total", direction="shrink").inc()
             if scheduler is not None:
                 scheduler._dead_since.pop(rid, None)
                 scheduler._idle_hint.discard(rid)

@@ -164,6 +164,9 @@ class ReconfigEngine:
         # flight recorder handle (obs/, DESIGN.md §11); the owning Shell
         # threads it in.  Emits ICAP hold/wait and compile spans.
         self.tracer = None
+        # live metrics registry (obs/registry.py, DESIGN.md §12); also
+        # threaded in by the owning Shell, same None-guarded contract
+        self.metrics = None
         self.stats = ReconfigStats()
         self.key_stats: Dict[tuple, KeyStats] = {}
         self.simulate_partial_s = simulate_partial_s
@@ -231,6 +234,11 @@ class ReconfigEngine:
             # as an attr so the derived pass can total ICAP serialization
             tr.emit_span("icap", ("icap", 0), t_acq, kernel=kernel_name,
                          wait_s=t_acq - t_wait0)
+        m = self.metrics
+        if m is not None:
+            now = time.perf_counter()
+            m.histogram("icap_hold_seconds").observe(now - t_acq, t=now)
+            m.histogram("icap_wait_seconds").observe(t_acq - t_wait0, t=now)
         dt = time.perf_counter() - t0
         with self._lock:
             self.stats.partial_loads += 1
@@ -350,6 +358,10 @@ class ReconfigEngine:
         if tr is not None:
             tr.emit_span("compile", ("compile", 0), t0,
                          kernel=kd.name, program=program)
+        m = self.metrics
+        if m is not None:
+            m.histogram("compile_seconds").observe(
+                time.perf_counter() - t0)
         return compiled
 
     # ------------------------------------------------------------------

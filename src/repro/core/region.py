@@ -111,14 +111,18 @@ class Region:
                  chunk_budget: Optional[int] = None,
                  pipeline: bool = True,
                  engine_mode: Optional[str] = None,
-                 tracer=None):
+                 tracer=None, metrics=None):
         self.rid = rid
         self.engine = engine
         self.interrupts = interrupts
         # flight recorder (obs/, DESIGN.md §11): None = tracing disabled,
         # and every emit site below is guarded to a single None check
         self.tracer = tracer
+        # live metrics registry (obs/registry.py, DESIGN.md §12): same
+        # None-guarded contract as the tracer
+        self.metrics = metrics
         self._track = ("region", rid)
+        self._t_preempt_req: Optional[float] = None
         self.devices = devices
         self.geometry = geometry
         self.chunk_budget = chunk_budget
@@ -199,6 +203,13 @@ class Region:
             cur = self.current_task
             tr.emit("preempt_request", self._track,
                     tid=cur.tid if cur is not None else None)
+        m = self.metrics
+        if m is not None:
+            m.counter("preempt_requests_total", region=self.rid).inc()
+        if self._t_preempt_req is None:
+            # first unhonored request wins: response latency is measured
+            # from what a waiting scheduler actually experiences
+            self._t_preempt_req = time.perf_counter()
         self._preempt.set()
         if self.flag is not None:
             # zero-copy device put: the in-flight megakernel observes the
@@ -207,6 +218,7 @@ class Region:
 
     def cancel_preempt(self):
         self._preempt.clear()
+        self._t_preempt_req = None
         if self.flag is not None:
             self.flag.clear()
 
@@ -349,6 +361,11 @@ class Region:
         if tr is not None:
             tr.emit_span("reconfig", self._track, t_rc0, tid=task.tid,
                          kernel=task.kernel)
+        m = self.metrics
+        if m is not None:
+            m.histogram("region_reconfig_seconds",
+                        region=self.rid).observe(dt)
+            m.counter("reconfigs_total", region=self.rid).inc()
         self.interrupts.raise_interrupt(Event(
             EventKind.RECONFIG_DONE, self.rid, task=task, payload=dt))
 
@@ -434,11 +451,23 @@ class Region:
         task.n_preemptions += 1
         self.stats.preemptions += 1
         self.current_task = None
-        self.stats.busy_s += time.perf_counter() - t_busy0
+        now = time.perf_counter()
+        self.stats.busy_s += now - t_busy0
         tr = self.tracer
         if tr is not None:
             tr.emit_span("run", self._track, t_busy0, tid=task.tid)
             tr.emit("preempt_honored", self._track, tid=task.tid)
+        m = self.metrics
+        if m is not None:
+            m.counter("region_run_seconds_total", region=self.rid).inc(
+                now - t_busy0)
+            m.counter("preemptions_total", region=self.rid).inc()
+            t_req = self._t_preempt_req
+            if t_req is not None:
+                m.histogram("preempt_response_seconds",
+                            region=self.rid).observe(
+                    max(now - t_req, 0.0), t=now)
+        self._t_preempt_req = None
         self.interrupts.raise_interrupt(Event(
             EventKind.TASK_PREEMPTED, self.rid, task=task))
 
@@ -456,11 +485,17 @@ class Region:
                                 for b in bufs[:2])
         self.stats.kernels_run += 1
         self.current_task = None
-        self.stats.busy_s += time.perf_counter() - t_busy0
+        now = time.perf_counter()
+        self.stats.busy_s += now - t_busy0
         tr = self.tracer
         if tr is not None:
             tr.emit_span("run", self._track, t_busy0, tid=task.tid)
             tr.emit("done", self._track, tid=task.tid)
+        m = self.metrics
+        if m is not None:
+            m.counter("region_run_seconds_total", region=self.rid).inc(
+                now - t_busy0)
+            m.counter("kernels_run_total", region=self.rid).inc()
         self.interrupts.raise_interrupt(Event(
             EventKind.TASK_DONE, self.rid, task=task))
 

@@ -32,6 +32,13 @@ _TRACE_DOC = ("flight-recorder derived metrics (obs/, DESIGN.md §11): "
               "region occupancy, ICAP serialization; {enabled: False} "
               "when no tracer is threaded")
 
+# one description, shared by every layer that carries a telemetry section
+_TELEMETRY_DOC = ("live-metrics state (obs/registry.py + obs/slo.py, "
+                  "DESIGN.md §12): registry series count, firing/fired "
+                  "alerts, starvation/convoy/preempt-regression detector "
+                  "outputs, per-tenant SLO burn rates, sampler status; "
+                  "{enabled: False} when no registry is threaded")
+
 
 def safe_rate(count: float, wall_s: float) -> float:
     """``count / wall_s`` that reports 0.0 for an instant, unmeasured, or
@@ -92,6 +99,7 @@ _SCHEDULER = {
     "pool": "region-pool capacity/utilization stats (elastic or static)",
     "reconfig": "nested shell_reconfig report (deduplicated detail)",
     "trace": _TRACE_DOC,
+    "telemetry": _TELEMETRY_DOC,
 }
 
 _SHELL_RECONFIG = {
@@ -139,6 +147,7 @@ _CLUSTER = {
     "energy_j_total": "summed per-shell energy model estimate",
     "per_shell": "per-shell scheduler/health/energy breakdown",
     "trace": _TRACE_DOC,
+    "telemetry": _TELEMETRY_DOC,
 }
 
 _SERVING = {
@@ -162,6 +171,7 @@ _SERVING = {
     "state_device_rounds": "rounds whose KV state stayed device-resident",
     "engine_mode": "region engine the backend shell runs (None = cluster)",
     "trace": _TRACE_DOC,
+    "telemetry": _TELEMETRY_DOC,
 }
 
 SCHEMA: Dict[str, Dict[str, str]] = {

@@ -42,6 +42,8 @@ from repro.core.policy import (POLICY_NAMES, SchedulingPolicy, make_policy,
                                region_fits)
 from repro.core.reporting import safe_rate, stamp
 from repro.obs.metrics import trace_section
+from repro.obs.registry import RATIO_BUCKETS
+from repro.obs.slo import size_class, telemetry_section
 from repro.core.region import Region, RegionState
 from repro.core.shell import Shell
 from repro.core.submit import SubmissionQueue, TaskHandle
@@ -87,6 +89,12 @@ class SchedulerConfig:
     # bounded by coalesce_window, so cross-class semantics are unchanged.
     coalescing: bool = True
     coalesce_window: int = 8
+    # starvation bound (seconds): a queued task older than this is
+    # *starving*.  The fcfs coalescing window refuses an intra-level jump
+    # over a starving head, and the telemetry monitor's starvation
+    # detector fires on it.  None = no bound (coalescing never refuses;
+    # the detector falls back to its own default).
+    starvation_bound_s: Optional[float] = None
 
     def validate(self) -> "SchedulerConfig":
         if self.n_priorities < 1:
@@ -103,6 +111,11 @@ class SchedulerConfig:
         if self.coalesce_window < 1:
             raise ValueError(
                 f"coalesce_window must be >= 1, got {self.coalesce_window}")
+        if self.starvation_bound_s is not None \
+                and self.starvation_bound_s <= 0:
+            raise ValueError(
+                f"starvation_bound_s must be > 0 (or None), got "
+                f"{self.starvation_bound_s}")
         if (self.policy or "").lower() not in POLICY_NAMES:
             raise ValueError(
                 f"unknown scheduling policy {self.policy!r}; "
@@ -128,6 +141,9 @@ class Scheduler:
         # run/reconfig spans.  None disables tracing at zero cost.
         self.tracer = getattr(shell, "tracer", None)
         self._trace_track = ("sched", 0)
+        # live metrics registry (obs/registry.py, DESIGN.md §12): shared
+        # with the shell like the tracer; None disables at zero cost.
+        self.metrics = getattr(shell, "metrics", None)
         # elastic region pool (core/pool.py); ticked from the event loop
         self.pool = pool
         self.cfg = (config or SchedulerConfig()).validate()
@@ -210,6 +226,10 @@ class Scheduler:
         if tr is not None:
             tr.emit("submit", self._trace_track, tid=task.tid,
                     kernel=task.kernel, priority=task.priority)
+        m = self.metrics
+        if m is not None:
+            m.counter("tasks_submitted_total", tenant=task.tenant,
+                      priority=task.priority).inc()
         return self._submissions.submit(task)
 
     def request_handoff(self, tid: int, callback) -> None:
@@ -550,6 +570,23 @@ class Scheduler:
             ev.task.deadline_missed = self._deadline_missed(ev.task)
             if ev.task.deadline_missed:
                 self.deadline_misses_total += 1
+            m = self.metrics
+            if m is not None:
+                t = ev.task
+                m.counter("tasks_done_total", tenant=t.tenant).inc()
+                if t.deadline_missed:
+                    m.counter("deadline_misses_total",
+                              tenant=t.tenant).inc()
+                if t.turnaround is not None:
+                    m.histogram("task_turnaround_seconds",
+                                tenant=t.tenant).observe(t.turnaround)
+                    # convoy-detector feed: slowdown = turnaround over
+                    # ideal (pure execution) service time, per size class
+                    ideal = max(t.run_s, 1e-6)
+                    m.histogram("task_slowdown_ratio",
+                                buckets=RATIO_BUCKETS,
+                                size_class=size_class(ideal)).observe(
+                        t.turnaround / ideal)
             self.policy.on_task_done(ev.task)
             handle = self._handles.get(ev.task.tid)
             if handle is not None:
@@ -660,8 +697,9 @@ class Scheduler:
         def matches(t: Task) -> bool:
             return t.kernel == kernel and t.args.signature() == sig
 
-        task = self.policy.peek_same_bitstream(matches, region,
-                                               self.cfg.coalesce_window)
+        task = self.policy.peek_same_bitstream(
+            matches, region, self.cfg.coalesce_window,
+            max_skip_wait_s=self.cfg.starvation_bound_s)
         if task is None or not self.policy.take(task):
             return False
         handle = self._handles.get(task.tid)
@@ -680,6 +718,10 @@ class Scheduler:
         if tr is not None:
             tr.emit("dispatch", self._trace_track, tid=task.tid,
                     rid=region.rid)
+        m = self.metrics
+        if m is not None:
+            m.counter("dispatches_total", tenant=task.tenant,
+                      phase=task.phase or "task").inc()
         task.last_dispatched_rid = region.rid
         key = (task.kernel, task.args.signature(), region.geometry)
         if self.cfg.full_reconfig_mode:
@@ -794,6 +836,19 @@ class Scheduler:
 
     def report(self) -> dict:
         tasks = self.finished
+        # live queue-wait ages (starvation visibility): the oldest queued
+        # task per priority level and per tenant, right now
+        now_pc = time.perf_counter()
+        wait_by_prio: dict = {}
+        wait_by_tenant: dict = {}
+        for t in self.policy.pending_tasks():
+            if t.t_arrived is None:
+                continue
+            w = max(now_pc - t.t_arrived, 0.0)
+            wait_by_prio[t.priority] = max(
+                wait_by_prio.get(t.priority, 0.0), w)
+            wait_by_tenant[t.tenant] = max(
+                wait_by_tenant.get(t.tenant, 0.0), w)
         per_prio = {}
         for p in range(self.cfg.n_priorities):
             st = [t.service_time for t in tasks
@@ -802,6 +857,7 @@ class Scheduler:
                 "n": len(st),
                 "mean_service_s": sum(st) / len(st) if st else 0.0,
                 "max_service_s": max(st) if st else 0.0,
+                "max_queue_wait_s": wait_by_prio.get(p, 0.0),
             }
         span = max((t.t_done for t in tasks if t.t_done), default=self.t0)
         raw_wall = span - self.t0
@@ -822,13 +878,21 @@ class Scheduler:
             d["turnarounds"].append(t.turnaround or 0.0)
             if t.deadline_missed:
                 d["deadline_misses"] += 1
+        # tenants with only queued (never-finished) work still show up —
+        # exactly the starving-victim case the wait ages are for
+        for tenant in wait_by_tenant:
+            per_tenant.setdefault(tenant, {
+                "n": 0, "work_s": 0.0, "deadline_misses": 0,
+                "turnarounds": []})
         shares = []
         for tenant, d in per_tenant.items():
             ts = sorted(d.pop("turnarounds"))
             d["turnaround_p50_s"] = self._percentile(ts, 0.50)
             d["turnaround_p99_s"] = self._percentile(ts, 0.99)
             d["share"] = d["work_s"] / weights.get(tenant, 1.0)
-            shares.append(d["share"])
+            d["max_queue_wait_s"] = wait_by_tenant.get(tenant, 0.0)
+            if d["n"] > 0:  # fairness is over tenants actually served
+                shares.append(d["share"])
         if len(shares) >= 2 and min(shares) > 0:
             fairness = max(shares) / min(shares)
         elif len(shares) >= 2:
@@ -916,4 +980,5 @@ class Scheduler:
             "pool": pool_stats,
             "reconfig": detail,
             "trace": trace_section(self.tracer),
+            "telemetry": telemetry_section(self.metrics),
         })

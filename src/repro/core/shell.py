@@ -42,17 +42,22 @@ class Shell:
                  region_widths: Optional[Sequence[int]] = None,
                  pipeline: bool = True,
                  engine: Optional[str] = None,
-                 tracer=None):
+                 tracer=None, metrics=None):
         self.devices = list(devices if devices is not None else jax.devices())
         self.interrupts = InterruptController()
         # flight recorder (obs/, DESIGN.md §11): one shared handle for the
         # whole shell — regions, the reconfig engine, the pool, and the
         # scheduler all emit into it.  None disables tracing at zero cost.
         self.tracer = tracer
+        # live metrics registry (obs/registry.py, DESIGN.md §12): fanned
+        # out exactly like the tracer — regions, the reconfig engine, and
+        # the scheduler all update the same labeled instruments
+        self.metrics = metrics
         self.engine = ReconfigEngine(simulate_partial_s=simulate_partial_s,
                                      simulate_full_s=simulate_full_s,
                                      cache_capacity=cache_capacity)
         self.engine.tracer = tracer
+        self.engine.metrics = metrics
         # the worker thread starts lazily with the scheduler's first hint
         self.prefetcher = BitstreamPrefetcher(
             self.engine, max_queue=prefetch_max_queue, auto_start=False)
@@ -94,7 +99,7 @@ class Shell:
                    devices=list(devices), geometry=(len(devices),),
                    chunk_budget=self.chunk_budget,
                    engine_mode=self.engine_mode,
-                   tracer=self.tracer)
+                   tracer=self.tracer, metrics=self.metrics)
         r.slowdown_s = self.region_slowdown_s
         self.floorplanner.bind(rid, devices)
         self.regions.append(r)

@@ -91,6 +91,69 @@ def _write_trace(tracer, trace_out, quiet: bool, tag: str):
               f"open in ui.perfetto.dev")
 
 
+class _Telemetry:
+    """Live-telemetry harness for a serve run (DESIGN.md §12).
+
+    Builds the registry + sampler + sinks only when ``--metrics-port``
+    and/or ``--metrics-stream`` asked for them; otherwise every attribute
+    stays ``None`` and the run pays nothing (the same zero-cost-disabled
+    contract the tracer follows).  ``registry`` is what gets threaded
+    into ``Shell(metrics=...)`` / ``ClusterFrontend(metrics=...)``.
+    """
+
+    def __init__(self, metrics_port=None, metrics_stream=None,
+                 quiet: bool = False, tag: str = "serve",
+                 interval_s: float = 0.2):
+        self.registry = None
+        self.monitor = None
+        self.server = None
+        self.writer = None
+        self._quiet, self._tag = quiet, tag
+        if metrics_port is None and not metrics_stream:
+            return
+        from repro.obs import (JsonlMetricsWriter, MetricsHTTPServer,
+                               MetricsRegistry, TelemetryMonitor)
+        self.registry = MetricsRegistry()
+        self.monitor = TelemetryMonitor(self.registry,
+                                        interval_s=interval_s)
+        if metrics_port is not None:
+            self.server = MetricsHTTPServer(self.registry,
+                                            port=metrics_port)
+            if not quiet:
+                print(f"[{tag}] serving metrics at "
+                      f"{self.server.url}/metrics "
+                      f"(JSON at {self.server.url}/telemetry.json)")
+        if metrics_stream:
+            self.writer = JsonlMetricsWriter(metrics_stream)
+            self.monitor.add_sink(self.writer)
+            if not quiet:
+                print(f"[{tag}] streaming telemetry snapshots to "
+                      f"{metrics_stream}")
+
+    def start(self, **attach_kwargs) -> "_Telemetry":
+        """Attach the sampler to the run's components and start it."""
+        if self.monitor is not None:
+            self.monitor.attach(**attach_kwargs)
+            self.monitor.start()
+        return self
+
+    def close(self):
+        """Take one final sample (so short runs still land a snapshot in
+        every sink), then stop the sampler and close the sinks."""
+        if self.monitor is not None:
+            self.monitor.sample()
+            self.monitor.stop()
+            if not self._quiet:
+                fired = self.monitor.n_fired
+                print(f"[{self._tag}] telemetry: "
+                      f"{self.registry.n_series()} series, "
+                      f"{fired} alert(s) fired")
+        if self.server is not None:
+            self.server.close()
+        if self.writer is not None:
+            self.writer.close()
+
+
 def serve(cfg, *, batch: int = 4, prompt_len: int = 32, gen: int = 16,
           seed: int = 0, quiet: bool = False, trace_out: str = None):
     tracer = _make_tracer(trace_out)
@@ -145,7 +208,9 @@ def serve_task_stream(*, n_tasks: int = 16, n_regions: int = 2,
                       max_regions: int = 3, metrics_out: str = None,
                       cache_capacity: int = None, quiet: bool = False,
                       engine: str = "pipelined",
-                      trace_out: str = None) -> dict:
+                      trace_out: str = None,
+                      metrics_port: int = None,
+                      metrics_stream: str = None) -> dict:
     """Serve a random blur-task stream through the preemptive scheduler and
     return its report, including the async-reconfiguration statistics.
 
@@ -199,19 +264,22 @@ def serve_task_stream(*, n_tasks: int = 16, n_regions: int = 2,
             tenants=tenant_names,
             deadline_slack=(1.0, 3.0) if policy == "edf" else None)
     tracer = _make_tracer(trace_out)
+    tele = _Telemetry(metrics_port, metrics_stream, quiet=quiet,
+                      tag="serve")
     pool = None
     if autoscale:
         shell = Shell(n_regions=min_regions, chunk_budget=2,
                       prefetch=prefetch, cache_capacity=cache_capacity,
-                      engine=engine, tracer=tracer)
+                      engine=engine, tracer=tracer, metrics=tele.registry)
         pool = RegionPool(shell, autoscaler=Autoscaler(AutoscalerConfig(
             min_regions=min_regions, max_regions=max_regions,
             grow_queue_depth=1.5, cooldown_s=0.3, idle_grace_s=0.4)))
     else:
         shell = Shell(n_regions=n_regions, chunk_budget=2, prefetch=prefetch,
                       cache_capacity=cache_capacity, engine=engine,
-                      tracer=tracer)
+                      tracer=tracer, metrics=tele.registry)
     sched = Scheduler(shell, SchedulerConfig(policy=policy), pool=pool)
+    tele.start(scheduler=sched)
 
     if not open_loop:
         rep = sched.run(tasks, quiet=True)
@@ -254,6 +322,7 @@ def serve_task_stream(*, n_tasks: int = 16, n_regions: int = 2,
         # stranded future the scheduler-side count missed
         rep["stranded_handles"] += sum(1 for h in handles if not h.done())
 
+    tele.close()
     shell.shutdown()
     _write_trace(tracer, trace_out, quiet, "serve")
     if metrics_out:
@@ -299,7 +368,9 @@ def serve_cluster(*, n_shells: int = 2, regions_per_shell: int = 1,
                   fail_shell: int = None, fail_after: int = None,
                   prefetch: bool = True, metrics_out: str = None,
                   quiet: bool = False, engine: str = "pipelined",
-                  trace_out: str = None) -> dict:
+                  trace_out: str = None,
+                  metrics_port: int = None,
+                  metrics_stream: str = None) -> dict:
     """Serve a bursty open-loop blur stream through a multi-shell cluster
     (DESIGN.md §7) and return the aggregated ``ClusterFrontend.report()``.
 
@@ -332,12 +403,15 @@ def serve_cluster(*, n_shells: int = 2, regions_per_shell: int = 1,
 
     tasks = [make_task(i) for i in range(n_tasks)]
     tracer = _make_tracer(trace_out)
+    tele = _Telemetry(metrics_port, metrics_stream, quiet=quiet,
+                      tag="cluster")
     fe = ClusterFrontend(n_shells=n_shells,
                          regions_per_shell=regions_per_shell,
                          router=router, rebalance=rebalance,
                          config=SchedulerConfig(policy=policy),
                          chunk_budget=2, prefetch=prefetch, engine=engine,
-                         tracer=tracer)
+                         tracer=tracer, metrics=tele.registry)
+    tele.start(cluster=fe)
     for node in fe.nodes:
         # deterministic per-chunk work (see serve_task_stream) + warm
         # bitstreams so the trace measures the fabric, not XLA compiles
@@ -377,6 +451,7 @@ def serve_cluster(*, n_shells: int = 2, regions_per_shell: int = 1,
             time.sleep(0.01)
     for h in handles:
         h.wait(timeout=180.0)
+    tele.close()
     rep = fe.shutdown()
     _write_trace(tracer, trace_out, quiet, "cluster")
     if metrics_out:
@@ -409,7 +484,9 @@ def serve_decode(*, n_sequences: int = 6, prompt_len: int = 12,
                  disaggregate: bool = True, preempt_every: int = 0,
                  partial_s: float = 0.0, seed: int = 0, verify: bool = True,
                  metrics_out: str = None, quiet: bool = False,
-                 engine: str = "pipelined", trace_out: str = None) -> dict:
+                 engine: str = "pipelined", trace_out: str = None,
+                 metrics_port: int = None,
+                 metrics_stream: str = None) -> dict:
     """Token-serving driver (DESIGN.md §9): submit ``n_sequences``
     generation requests through the continuous-batching ``ServingEngine``
     over a preemptive scheduler, verify every streamed sequence against
@@ -436,10 +513,12 @@ def serve_decode(*, n_sequences: int = 6, prompt_len: int = 12,
     # stretched chunks so the probe lands before the round drains (same
     # slowdown hook the straggler tests use)
     tracer = _make_tracer(trace_out)
+    tele = _Telemetry(metrics_port, metrics_stream, quiet=quiet,
+                      tag="decode")
     shell = Shell(n_regions=n_regions,
                   chunk_budget=1 if preempt_every else 2,
                   simulate_partial_s=partial_s, engine=engine,
-                  tracer=tracer)
+                  tracer=tracer, metrics=tele.registry)
     if preempt_every and engine != "megakernel":
         # stretch chunks so the probe thread lands mid-round; megakernel
         # probes arm the deterministic flag write instead (no timing race,
@@ -463,6 +542,7 @@ def serve_decode(*, n_sequences: int = 6, prompt_len: int = 12,
                         decode_regions=decode_pin,
                         preempt_probe_every=preempt_every)
     engine = ServingEngine(sched, cfg).start()
+    tele.start(scheduler=sched, serving=engine)
 
     specs, handles = [], []
     for i in range(n_sequences):
@@ -482,6 +562,7 @@ def serve_decode(*, n_sequences: int = 6, prompt_len: int = 12,
                 mismatches += 1
                 print(f"[decode] sequence #{h.sid} MISMATCH: "
                       f"{got[:6]}... != {ref[:6]}...")
+    tele.close()
     rep = engine.drain(timeout=60.0)
     sched.drain(timeout=60.0)
     shell.shutdown()
@@ -562,6 +643,17 @@ def main(argv=None):
                              "it here as Chrome/Perfetto trace JSON "
                              "(open in ui.perfetto.dev)")
     common.add_argument("--quiet", action="store_true")
+    # live telemetry (DESIGN.md §12), for the scheduling subcommands
+    tele_common = argparse.ArgumentParser(add_help=False)
+    tele_common.add_argument(
+        "--metrics-port", type=int, default=None,
+        help="serve live Prometheus text at "
+             "http://127.0.0.1:PORT/metrics (0 = ephemeral port; JSON "
+             "snapshots at /telemetry.json; tools/top.py renders either)")
+    tele_common.add_argument(
+        "--metrics-stream", default=None,
+        help="append one JSON telemetry snapshot per sampler tick to "
+             "this file (JSONL; tools/top.py --stream tails it)")
     stream_common = argparse.ArgumentParser(add_help=False)
     stream_common.add_argument("--n-tasks", type=int, default=16)
     stream_common.add_argument("--regions", type=int, default=2)
@@ -592,7 +684,8 @@ def main(argv=None):
     lm.add_argument("--prompt-len", type=int, default=32)
     lm.add_argument("--gen", type=int, default=16)
 
-    sc = sub.add_parser("scheduler", parents=[common, stream_common],
+    sc = sub.add_parser("scheduler",
+                        parents=[common, stream_common, tele_common],
                         help="preemptive single-shell task-stream server")
     sc.add_argument("--open-loop", action="store_true",
                     help="submit tasks live via Scheduler.submit() instead "
@@ -606,7 +699,8 @@ def main(argv=None):
     sc.add_argument("--max-regions", type=int, default=3)
     sc.add_argument("--cache-capacity", type=int, default=None)
 
-    cl = sub.add_parser("cluster", parents=[common, stream_common],
+    cl = sub.add_parser("cluster",
+                        parents=[common, stream_common, tele_common],
                         help="multi-shell fabric (router, migration, "
                              "failover)")
     cl.add_argument("--shells", type=int, default=2,
@@ -627,7 +721,7 @@ def main(argv=None):
                     help="submit count after which --fail-shell fires "
                          "(default: half the trace)")
 
-    dc = sub.add_parser("decode", parents=[common],
+    dc = sub.add_parser("decode", parents=[common, tele_common],
                         help="continuous-batching token serving "
                              "(DESIGN.md §9)")
     dc.add_argument("--sequences", type=int, default=6)
@@ -671,7 +765,9 @@ def main(argv=None):
                       fail_after=args.fail_after,
                       prefetch=not args.no_prefetch,
                       metrics_out=args.metrics_out, quiet=args.quiet,
-                      engine=args.engine, trace_out=args.trace_out)
+                      engine=args.engine, trace_out=args.trace_out,
+                      metrics_port=args.metrics_port,
+                      metrics_stream=args.metrics_stream)
     elif args.cmd == "scheduler":
         serve_task_stream(n_tasks=args.n_tasks, n_regions=args.regions,
                           seed=args.seed,
@@ -685,7 +781,9 @@ def main(argv=None):
                           metrics_out=args.metrics_out,
                           cache_capacity=args.cache_capacity,
                           quiet=args.quiet, engine=args.engine,
-                          trace_out=args.trace_out)
+                          trace_out=args.trace_out,
+                          metrics_port=args.metrics_port,
+                          metrics_stream=args.metrics_stream)
     elif args.cmd == "decode":
         serve_decode(n_sequences=args.sequences, prompt_len=args.prompt_len,
                      max_new=args.max_new, slots=args.slots,
@@ -696,7 +794,9 @@ def main(argv=None):
                      partial_s=args.partial_s, seed=args.seed,
                      verify=not args.no_verify,
                      metrics_out=args.metrics_out, quiet=args.quiet,
-                     engine=args.engine, trace_out=args.trace_out)
+                     engine=args.engine, trace_out=args.trace_out,
+                     metrics_port=args.metrics_port,
+                     metrics_stream=args.metrics_stream)
     else:
         cfg = get_config(args.arch)
         if args.reduced:

@@ -13,8 +13,18 @@ folds the raw stream into per-task latency breakdowns and preemption
 response percentiles merged into ``report()["trace"]``.
 """
 from repro.obs.export import export_chrome_trace
+from repro.obs.exporter import (JsonlMetricsWriter, MetricsHTTPServer,
+                                prometheus_text, telemetry_json)
 from repro.obs.metrics import derive_metrics, trace_section
+from repro.obs.registry import (Counter, Gauge, Histogram, MetricsRegistry)
+from repro.obs.slo import (DetectorConfig, SloPolicy, TelemetryMonitor,
+                           telemetry_section)
 from repro.obs.tracer import TraceEvent, Tracer
 
 __all__ = ["TraceEvent", "Tracer", "export_chrome_trace",
-           "derive_metrics", "trace_section"]
+           "derive_metrics", "trace_section",
+           "Counter", "Gauge", "Histogram", "MetricsRegistry",
+           "SloPolicy", "DetectorConfig", "TelemetryMonitor",
+           "telemetry_section",
+           "prometheus_text", "telemetry_json", "MetricsHTTPServer",
+           "JsonlMetricsWriter"]

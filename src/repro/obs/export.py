@@ -53,7 +53,10 @@ def export_chrome_trace(source: Union[Tracer, Iterable[TraceEvent]],
         base = source.t0 if t0 is None else t0
         other = {"tracer_capacity": source.capacity,
                  "events_emitted": source.n_emitted,
-                 "events_dropped": source.dropped}
+                 "events_dropped": source.dropped,
+                 # alias: the name trace consumers (tools/trace_report.py,
+                 # CI) look for when auditing ring truncation
+                 "dropped_events": source.dropped}
     else:
         events = list(source)
         base = t0 if t0 is not None else min((e.t for e in events),

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 from repro.core.reporting import safe_rate, stamp
 from repro.core.task import Task
 from repro.obs.metrics import trace_section
+from repro.obs.slo import telemetry_section
 from repro.serving.kernels import (COL_ACTIVE, COL_LAST_TOK, COL_N_EMIT,
                                    init_state)
 from repro.serving.sequence import (SamplingParams, Sequence, SequenceError,
@@ -122,6 +123,9 @@ class ServingEngine:
         # Scheduler and ClusterFrontend both expose ``.tracer`` — so
         # serving events share the timeline of the regions that ran them
         self.tracer = getattr(backend, "tracer", None)
+        # live metrics registry (obs/registry.py, DESIGN.md §12): adopted
+        # the same way, so serving histograms share the backend's registry
+        self.metrics = getattr(backend, "metrics", None)
         self._trace_track = ("serving", 0)
         self.cfg = (config or ServingConfig()).validate()
         self._slot_t0: List[Optional[float]] = [None] * self.cfg.max_slots
@@ -163,6 +167,9 @@ class ServingEngine:
         if self.tracer is not None:
             self.tracer.emit("seq_submit", self._trace_track, tid=seq.sid,
                              prompt_len=len(seq.prompt))
+        if self.metrics is not None:
+            self.metrics.counter("serving_seqs_total",
+                                 tenant=seq.tenant).inc()
         self._work.set()
         return handle
 
@@ -324,6 +331,12 @@ class ServingEngine:
             if self.tracer is not None:
                 self.tracer.emit("ttft", self._trace_track, tid=seq.sid,
                                  ttft_s=seq.time_to_first_token)
+            if self.metrics is not None:
+                self.metrics.histogram(
+                    "serving_ttft_seconds", tenant=seq.tenant,
+                ).observe(seq.time_to_first_token)
+                self.metrics.counter("serving_tokens_total",
+                                     tenant=seq.tenant).inc()
             handle._push([first])
             if len(seq.tokens) >= seq.params.max_new_tokens:
                 with self._lock:
@@ -425,12 +438,17 @@ class ServingEngine:
                 self.stats.state_device_rounds += 1
             self.stats.decode_preemptions += final.n_preemptions
             self.stats.decode_migrations += final.n_migrations
+        if self.metrics is not None:
+            self.metrics.counter("serving_decode_rounds_total").inc()
         for i, (seq, handle) in occupied:
             n = int(slots_tbl[i, COL_N_EMIT])
             toks = [int(t) for t in out_np[i, :n]]
             seq.tokens.extend(toks)
             with self._lock:
                 self.stats.tokens_out += n
+            if self.metrics is not None and n:
+                self.metrics.counter("serving_tokens_total",
+                                     tenant=seq.tenant).inc(n)
             handle._push(toks)
             if len(seq.tokens) >= seq.params.max_new_tokens:
                 with self._lock:
@@ -567,4 +585,5 @@ class ServingEngine:
                 "engine_mode": getattr(getattr(self.backend, "shell", None),
                                        "engine_mode", None),
                 "trace": trace_section(self.tracer),
+                "telemetry": telemetry_section(self.metrics),
             })

@@ -357,3 +357,69 @@ def test_scheduler_report_zero_wall_rate():
         assert rep["throughput_tps"] == 0.0
     finally:
         shell.shutdown()
+
+
+# ----------------------------------- serving tracks + ring-drop metadata
+def test_export_serving_tracks():
+    """Serving-engine tracks (engine/slot/lm) export as named Perfetto
+    processes with one labelled row per decode slot (DESIGN.md §11)."""
+    tr = Tracer()
+    t0 = time.perf_counter()
+    tr.emit("seq_submit", ("serving", 0), tid=1)
+    tr.emit_span("prefill", ("slot", 0), t0, tid=1, t_end=t0 + 0.01)
+    tr.emit_span("decode_round", ("slot", 1), t0, tid=2, t_end=t0 + 0.02)
+    tr.emit_span("lm_step", ("lm", 0), t0, t_end=t0 + 0.005)
+    doc = export_chrome_trace(tr)
+    procs = {e["args"]["name"] for e in doc["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert {"serving engine", "serving slots", "lm pipeline"} <= procs
+    threads = {e["args"]["name"] for e in doc["traceEvents"]
+               if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert {"slot 0", "slot 1", "lm 0"} <= threads
+    # slot spans land on their own rows (tid = slot index)
+    spans = [e for e in doc["traceEvents"]
+             if e["ph"] == "X" and e["cat"] == "slot"]
+    assert sorted(e["tid"] for e in spans) == [0, 1]
+
+
+def test_export_ring_drop_metadata():
+    """A wrapped ring must advertise its drop count under BOTH metadata
+    names (``events_dropped`` historic, ``dropped_events`` the audited
+    alias) so trace consumers can flag truncated timelines."""
+    tr = Tracer(capacity=4)
+    for i in range(10):
+        tr.emit("tick", ("sched", 0), tid=i)
+    other = export_chrome_trace(tr)["otherData"]
+    assert other["events_dropped"] == 6
+    assert other["dropped_events"] == 6
+    assert other["events_emitted"] == 10
+
+
+def test_trace_report_flags_truncated_trace(tmp_path):
+    """``tools/trace_report.py`` must WARN (and set ``truncated`` /
+    ``dropped_events`` in ``--json``) when the exported ring dropped
+    events — the summary's figures are lower bounds, not a full run."""
+    tr = Tracer(capacity=4)
+    for i in range(10):
+        tr.emit("tick", ("sched", 0), tid=i)
+    path = tmp_path / "truncated.json"
+    export_chrome_trace(tr, path=str(path))
+    tool = REPO / "tools" / "trace_report.py"
+    out = subprocess.run([sys.executable, str(tool), str(path)],
+                         capture_output=True, text=True, timeout=60)
+    assert out.returncode == 0, out.stderr
+    assert "WARNING" in out.stdout and "dropped 6" in out.stdout
+    js = subprocess.run([sys.executable, str(tool), str(path), "--json"],
+                        capture_output=True, text=True, timeout=60)
+    assert js.returncode == 0, js.stderr
+    parsed = json.loads(js.stdout)[str(path)]
+    assert parsed["truncated"] is True
+    assert parsed["dropped_events"] == 6
+    # a clean trace must not warn
+    tr2 = Tracer()
+    tr2.emit("tick", ("sched", 0))
+    p2 = tmp_path / "clean.json"
+    export_chrome_trace(tr2, path=str(p2))
+    out2 = subprocess.run([sys.executable, str(tool), str(p2)],
+                          capture_output=True, text=True, timeout=60)
+    assert out2.returncode == 0 and "WARNING" not in out2.stdout

@@ -106,3 +106,48 @@ def test_trace_section_schema():
     finally:
         shell2.shutdown()
     assert rep2["trace"] == {"enabled": False}
+
+
+def test_telemetry_section_schema():
+    """The ``telemetry`` key: ``{enabled: False}`` unmetered; with a
+    registry + monitor threaded it carries series counts plus the full
+    alert/detector/SLO state — still as ONE documented top-level key."""
+    from repro.controller.kernels import get_kernel
+    from repro.core.scheduler import Scheduler, SchedulerConfig
+    from repro.core.shell import Shell
+    from repro.core.task import Task
+    from repro.kernels.blur.tasks import make_image
+    from repro.obs import MetricsRegistry, TelemetryMonitor
+
+    rng = np.random.default_rng(2)
+    img = make_image(rng, 16)
+    kd = get_kernel("MedianBlur")
+    reg = MetricsRegistry()
+    shell = Shell(n_regions=1, chunk_budget=2, prefetch=False, metrics=reg)
+    try:
+        sched = Scheduler(shell, SchedulerConfig())
+        mon = TelemetryMonitor(reg).attach(scheduler=sched)
+        t = Task(kernel="MedianBlur",
+                 args=kd.bundle(img, np.zeros_like(img), H=16, W=16,
+                                iters=1))
+        sched.run([t], quiet=True)
+        mon.sample()
+        rep = sched.report()
+    finally:
+        shell.shutdown()
+    _check("scheduler", rep)
+    tele = rep["telemetry"]
+    assert tele["enabled"] is True and tele["sampler"] is True
+    for key in ("n_series", "alerts", "alerts_fired_total", "detectors",
+                "slo", "samples"):
+        assert key in tele, key
+    assert tele["samples"] >= 1 and tele["n_series"] > 0
+    assert tele["alerts"] == []
+
+    # unmetered runs keep the key but flag it disabled
+    shell2 = Shell(n_regions=1, chunk_budget=2, prefetch=False)
+    try:
+        rep2 = Scheduler(shell2, SchedulerConfig()).report()
+    finally:
+        shell2.shutdown()
+    assert rep2["telemetry"] == {"enabled": False}

@@ -1,0 +1,473 @@
+"""Live telemetry (DESIGN.md §12): metrics registry semantics, Prometheus
+text/JSONL export, the SLO burn-rate monitor, the starvation/convoy/
+preempt-regression detectors (each must fire *alone* under a config that
+silences the others), the starvation-aware coalescing bound, and the
+``tools/top.py`` CLI."""
+import json
+import subprocess
+import sys
+import time
+import urllib.request
+from pathlib import Path
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core.policy import (EarliestDeadlineFirst, FcfsPriority,
+                               WeightedFairShare)
+from repro.core.task import Task, TaskStatus
+from repro.obs import (DetectorConfig, JsonlMetricsWriter, MetricsHTTPServer,
+                       MetricsRegistry, SloPolicy, TelemetryMonitor,
+                       prometheus_text, telemetry_json, telemetry_section)
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+# --------------------------------------------------------------- registry
+def test_counter_gauge_label_identity():
+    reg = MetricsRegistry()
+    reg.counter("jobs_total", tenant="a").inc()
+    reg.counter("jobs_total", tenant="a").inc(2)
+    reg.counter("jobs_total", tenant="b").inc()
+    assert reg.counter("jobs_total", tenant="a").value == 3.0
+    assert reg.counter("jobs_total", tenant="b").value == 1.0
+    g = reg.gauge("depth")
+    g.set(5)
+    g.dec(2)
+    assert reg.gauge("depth").value == 3.0
+    # one series per distinct (kind, name, labels)
+    assert reg.n_series() == 3
+
+
+def test_histogram_percentiles_and_window():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", buckets=(0.001, 0.01, 0.1, 1.0))
+    now = 100.0
+    for i in range(100):
+        h.observe(0.005, t=now - 50.0)     # old: outside a 10s window
+    for i in range(10):
+        h.observe(0.5, t=now - 1.0)
+    s = h.summary()
+    assert s["count"] == 110
+    assert s["max"] == pytest.approx(0.5)
+    assert 0.001 <= h.percentile(0.5) <= 0.01   # bulk sits in that bucket
+    assert h.percentile(0.99) > 0.1
+    recent = h.window(now, 10.0)
+    assert len(recent) == 10 and all(v == 0.5 for v in recent)
+    # open top bucket percentile is capped at the observed max
+    h.observe(42.0, t=now)
+    assert h.percentile(1.0) <= 42.0
+
+
+def test_snapshot_shape():
+    reg = MetricsRegistry()
+    reg.counter("c", x="1").inc()
+    reg.gauge("g").set(2)
+    reg.histogram("h").observe(0.1)
+    snap = reg.snapshot()
+    assert snap["n_series"] == 3
+    assert snap["counters"]["c"][0] == {"labels": {"x": "1"}, "value": 1.0}
+    assert snap["gauges"]["g"][0]["value"] == 2.0
+    assert snap["histograms"]["h"][0]["count"] == 1
+
+
+# --------------------------------------------------------------- exporter
+def test_prometheus_text_format():
+    reg = MetricsRegistry()
+    reg.counter("tasks_done_total", tenant="a").inc(3)
+    reg.gauge("queue_depth").set(2)
+    reg.histogram("task_turnaround_seconds",
+                  buckets=(0.1, 1.0), tenant="a").observe(0.5)
+    txt = prometheus_text(reg)
+    assert "# TYPE repro_tasks_done_total counter" in txt
+    assert 'repro_tasks_done_total{tenant="a"} 3' in txt
+    assert "# TYPE repro_queue_depth gauge" in txt
+    assert "# TYPE repro_task_turnaround_seconds histogram" in txt
+    # cumulative buckets + +Inf + _sum/_count
+    assert 'le="0.1"' in txt and 'le="+Inf"' in txt
+    assert "repro_task_turnaround_seconds_count" in txt
+    lines = [l for l in txt.splitlines()
+             if l.startswith("repro_task_turnaround_seconds_bucket")]
+    counts = [float(l.rsplit(" ", 1)[1]) for l in lines]
+    assert counts == sorted(counts), "buckets must be cumulative"
+
+
+def test_prometheus_label_escaping():
+    reg = MetricsRegistry()
+    reg.counter("c", path='a"b\\c').inc()
+    txt = prometheus_text(reg)
+    assert 'path="a\\"b\\\\c"' in txt
+
+
+def test_http_server_scrape_and_json():
+    reg = MetricsRegistry()
+    reg.counter("hits_total").inc()
+    srv = MetricsHTTPServer(reg, port=0)
+    try:
+        with urllib.request.urlopen(f"{srv.url}/metrics", timeout=5) as r:
+            body = r.read().decode()
+            assert r.headers["Content-Type"].startswith("text/plain")
+        assert "repro_hits_total 1" in body
+        with urllib.request.urlopen(f"{srv.url}/telemetry.json",
+                                    timeout=5) as r:
+            doc = json.loads(r.read().decode())
+        assert doc["n_series"] == 1
+    finally:
+        srv.close()
+    srv.close()  # idempotent
+
+
+def test_jsonl_writer(tmp_path):
+    path = tmp_path / "stream.jsonl"
+    reg = MetricsRegistry()
+    mon = TelemetryMonitor(reg)
+    w = JsonlMetricsWriter(str(path))
+    mon.add_sink(w)
+    mon.sample()
+    mon.sample()
+    w.close()
+    lines = [json.loads(l) for l in path.read_text().splitlines() if l]
+    assert len(lines) == 2
+    assert all("alerts" in l and "detectors" in l for l in lines)
+
+
+# -------------------------------------------------- detectors (isolation)
+def _stub_sched(pending, bound=None):
+    return SimpleNamespace(
+        policy=SimpleNamespace(pending_tasks=lambda: pending),
+        cfg=SimpleNamespace(starvation_bound_s=bound),
+        shell=None)
+
+
+def _pending_task(wait_s, now, tenant="default", priority=2, tid=1):
+    return SimpleNamespace(t_arrived=now - wait_s, tenant=tenant,
+                           priority=priority, tid=tid)
+
+
+def _only(detectors_cfg):
+    """Helper: alert names firing after one sample tick."""
+    def run(feed, scheds=()):
+        reg = MetricsRegistry()
+        mon = TelemetryMonitor(reg, detectors=detectors_cfg)
+        now = time.perf_counter()
+        for s in scheds:
+            mon._scheds.append((s, {}))
+        feed(reg, now)
+        mon.sample(now=now)
+        return mon, sorted({a["name"] for a in mon.alerts()})
+    return run
+
+
+def test_starvation_detector_fires_alone():
+    cfg = DetectorConfig(starvation_bound_s=1.0, convoy_slowdown=None,
+                         preempt_response_target_s=None)
+    now = time.perf_counter()
+    sched = _stub_sched([_pending_task(5.0, now, tenant="victim")])
+    mon, names = _only(cfg)(lambda reg, now: None, scheds=[sched])
+    assert names == ["starvation"]
+    a = mon.alerts()[0]
+    assert a["labels"]["tenant"] == "victim"
+    assert a["value"] > 1.0 and a["threshold"] == 1.0
+    st = mon.detector_state()["starvation"]
+    assert st["tenant"] == "victim" and st["wait_s"] > 1.0
+
+
+def test_starvation_uses_scheduler_bound_over_default():
+    # scheduler's own bound (10s) silences what the detector default (1s)
+    # would have fired
+    cfg = DetectorConfig(starvation_bound_s=1.0, convoy_slowdown=None,
+                         preempt_response_target_s=None)
+    now = time.perf_counter()
+    sched = _stub_sched([_pending_task(5.0, now)], bound=10.0)
+    _, names = _only(cfg)(lambda reg, now: None, scheds=[sched])
+    assert names == []
+
+
+def test_convoy_detector_fires_alone():
+    cfg = DetectorConfig(starvation_bound_s=None, convoy_slowdown=8.0,
+                         convoy_min_tasks=6, preempt_response_target_s=None)
+
+    def feed(reg, now):
+        h = reg.histogram("task_slowdown_ratio", size_class="short")
+        for _ in range(8):
+            h.observe(20.0, t=now)       # short tasks 20x their ideal
+
+    mon, names = _only(cfg)(feed)
+    assert names == ["convoy"]
+    assert mon.detector_state()["convoy"]["size_class"] == "short"
+
+
+def test_convoy_needs_min_samples():
+    cfg = DetectorConfig(starvation_bound_s=None, convoy_slowdown=8.0,
+                         convoy_min_tasks=6, preempt_response_target_s=None)
+
+    def feed(reg, now):
+        h = reg.histogram("task_slowdown_ratio", size_class="short")
+        for _ in range(3):               # below convoy_min_tasks
+            h.observe(50.0, t=now)
+
+    _, names = _only(cfg)(feed)
+    assert names == []
+
+
+def test_preempt_regression_detector_fires_alone():
+    cfg = DetectorConfig(starvation_bound_s=None, convoy_slowdown=None,
+                         preempt_response_target_s=0.01,
+                         preempt_min_samples=5)
+
+    def feed(reg, now):
+        h = reg.histogram("preempt_response_seconds", region=0)
+        for _ in range(6):
+            h.observe(0.2, t=now)
+
+    _, names = _only(cfg)(feed)
+    assert names == ["preempt_response"]
+
+
+def test_alert_resolves_when_condition_clears():
+    cfg = DetectorConfig(starvation_bound_s=None, convoy_slowdown=8.0,
+                         convoy_min_tasks=2, convoy_window_s=5.0,
+                         preempt_response_target_s=None)
+    reg = MetricsRegistry()
+    mon = TelemetryMonitor(reg, detectors=cfg)
+    now = time.perf_counter()
+    h = reg.histogram("task_slowdown_ratio", size_class="short")
+    for _ in range(4):
+        h.observe(30.0, t=now)
+    mon.sample(now=now)
+    assert [a["name"] for a in mon.alerts()] == ["convoy"]
+    assert mon.n_fired == 1
+    # window drains -> the alert resolves (and only fired once)
+    mon.sample(now=now + 60.0)
+    assert mon.alerts() == []
+    assert [a["name"] for a in mon.resolved()] == ["convoy"]
+    assert mon.n_fired == 1
+
+
+# ------------------------------------------------------ SLO burn rates
+def _slo_monitor(policy):
+    reg = MetricsRegistry()
+    cfg = DetectorConfig(starvation_bound_s=None, convoy_slowdown=None,
+                         preempt_response_target_s=None)
+    return reg, TelemetryMonitor(reg, policies=[policy], detectors=cfg)
+
+
+def test_slo_burn_fires_on_both_windows():
+    pol = SloPolicy(tenant="acme", latency_target_s=0.1, miss_budget=0.1,
+                    short_window_s=5.0, long_window_s=30.0,
+                    burn_threshold=2.0)
+    reg, mon = _slo_monitor(pol)
+    now = time.perf_counter()
+    h = reg.histogram("task_turnaround_seconds", tenant="acme")
+    for i in range(20):                   # half the traffic misses: burn 5x
+        h.observe(0.5 if i % 2 else 0.01, t=now - 1.0)
+    mon.sample(now=now)
+    names = [a["name"] for a in mon.alerts()]
+    assert names == ["slo_burn"]
+    st = mon.slo_state()["acme"]["task_turnaround_seconds"]
+    assert st["burn_short"] == pytest.approx(5.0)
+    assert st["burn_long"] == pytest.approx(5.0)
+
+
+def test_slo_burn_needs_both_windows():
+    """Bad traffic only outside the short window must NOT page (the
+    multi-window rule: a recovered incident stops alerting)."""
+    pol = SloPolicy(tenant="acme", latency_target_s=0.1, miss_budget=0.1,
+                    short_window_s=5.0, long_window_s=30.0,
+                    burn_threshold=2.0)
+    reg, mon = _slo_monitor(pol)
+    now = time.perf_counter()
+    h = reg.histogram("task_turnaround_seconds", tenant="acme")
+    for _ in range(20):
+        h.observe(0.5, t=now - 20.0)      # old misses: long window only
+    for _ in range(10):
+        h.observe(0.01, t=now - 1.0)      # fresh traffic is healthy
+    mon.sample(now=now)
+    assert mon.alerts() == []
+
+
+def test_slo_policy_validation():
+    with pytest.raises(ValueError):
+        SloPolicy(miss_budget=0.0).validate()
+    with pytest.raises(ValueError):
+        SloPolicy(short_window_s=60.0, long_window_s=5.0).validate()
+    with pytest.raises(ValueError):
+        SloPolicy(burn_threshold=0.0).validate()
+
+
+def test_telemetry_section_states():
+    assert telemetry_section(None) == {"enabled": False}
+    reg = MetricsRegistry()
+    sec = telemetry_section(reg)
+    assert sec["enabled"] is True and sec["sampler"] is False
+    TelemetryMonitor(reg).sample()
+    sec = telemetry_section(reg)
+    assert sec["sampler"] is True and sec["samples"] == 1
+
+
+# ------------------------------------- starvation-aware coalescing bound
+class _Args:
+    def signature(self):
+        return ("sig",)
+
+
+class _FakeRegion:
+    def __init__(self, rid=0):
+        self.rid = rid
+        self.geometry = (1,)
+        self.current_task = None
+
+
+def _ptask(kernel="K", priority=0, tenant="default", wait_s=0.0,
+           deadline=None):
+    t = Task(kernel=kernel, args=_Args(), priority=priority,
+             tenant=tenant, deadline_s=deadline)
+    t.status = TaskStatus.QUEUED
+    t.t_arrived = time.perf_counter() - wait_s
+    return t
+
+
+@pytest.mark.parametrize("make_policy", [
+    lambda: FcfsPriority(5),
+    lambda: EarliestDeadlineFirst(),
+    lambda: WeightedFairShare(),
+])
+def test_coalesce_refused_past_starving_head(make_policy):
+    """A long same-bitstream stream must stop jumping a fitting head once
+    its queue wait exceeds the starvation bound — with no bound the jump
+    renews forever (the regression this bound fixes)."""
+    pol = make_policy()
+    victim = _ptask(kernel="A", wait_s=10.0)
+    stream = [_ptask(kernel="B", wait_s=0.0) for _ in range(4)]
+    pol.enqueue(victim)
+    for t in stream:
+        pol.enqueue(t)
+    matches = lambda t: t.kernel == "B"
+    region = _FakeRegion()
+    # no bound: the stream keeps jumping the victim indefinitely
+    got = pol.peek_same_bitstream(matches, region, window=8)
+    assert got is not None and got.kernel == "B"
+    # bound below the victim's wait: the jump is refused
+    assert pol.peek_same_bitstream(matches, region, window=8,
+                                   max_skip_wait_s=5.0) is None
+    # bound the victim has not hit yet: coalescing still allowed
+    got = pol.peek_same_bitstream(matches, region, window=8,
+                                  max_skip_wait_s=60.0)
+    assert got is not None and got.kernel == "B"
+
+
+def test_coalesce_stream_drains_until_starvation():
+    """Drive the regression end to end at the policy level: keep taking
+    coalesced matches while the victim ages; the moment its wait crosses
+    the bound the stream must yield to it."""
+    pol = FcfsPriority(5)
+    now = time.perf_counter()
+    victim = _ptask(kernel="A")
+    victim.t_arrived = now - 0.95         # 50ms short of the bound
+    pol.enqueue(victim)
+    for _ in range(6):
+        pol.enqueue(_ptask(kernel="B"))
+    region = _FakeRegion()
+    matches = lambda t: t.kernel == "B"
+    served = 0
+    deadline = time.time() + 10.0
+    while time.time() < deadline:
+        t = pol.peek_same_bitstream(matches, region, window=8,
+                                    max_skip_wait_s=1.0)
+        if t is None:
+            break
+        assert pol.take(t)
+        served += 1
+        time.sleep(0.02)
+    # the stream was cut off by the aging victim, not exhausted
+    assert served < 6
+    assert any(t is victim for t in pol.pending_tasks())
+
+
+def test_starvation_bound_config_validation():
+    from repro.core.scheduler import SchedulerConfig
+    with pytest.raises(ValueError):
+        SchedulerConfig(starvation_bound_s=0.0).validate()
+    SchedulerConfig(starvation_bound_s=2.5).validate()
+
+
+# ----------------------------------------------------- live integration
+SIZE = 16
+
+
+def _blur_task(rng, tenant="default"):
+    from repro.controller.kernels import get_kernel
+    from repro.kernels.blur.tasks import make_image
+
+    img = make_image(rng, SIZE)
+    kd = get_kernel("MedianBlur")
+    return Task(kernel="MedianBlur",
+                args=kd.bundle(img, np.zeros_like(img), H=SIZE, W=SIZE,
+                               iters=1),
+                tenant=tenant)
+
+
+def test_live_run_scrape_and_report(tmp_path):
+    """End to end: a metered run scrapes as valid Prometheus text with
+    per-tenant histograms mid-run, the report carries the telemetry
+    section, and max queue-wait surfaces per priority and per tenant."""
+    from repro.client import Client
+
+    rng = np.random.default_rng(0)
+    reg = MetricsRegistry()
+    client = Client(n_regions=2, metrics=reg, prefetch=False)
+    mon = TelemetryMonitor(reg).attach(scheduler=client.scheduler)
+    srv = MetricsHTTPServer(reg, port=0)
+    try:
+        handles = [client.submit(_blur_task(rng, tenant=f"t{i % 2}"))
+                   for i in range(4)]
+        for h in handles:
+            h.result(60.0)
+        mon.sample()
+        with urllib.request.urlopen(f"{srv.url}/metrics", timeout=5) as r:
+            txt = r.read().decode()
+        assert "# TYPE repro_task_turnaround_seconds histogram" in txt
+        assert 'tenant="t0"' in txt and 'tenant="t1"' in txt
+        assert "repro_region_occupancy" in txt
+        rep = client.report()
+        tele = rep["telemetry"]
+        assert tele["enabled"] and tele["sampler"]
+        for d in rep["service_by_priority"].values():
+            assert "max_queue_wait_s" in d
+        for d in rep["per_tenant"].values():
+            assert "max_queue_wait_s" in d
+        assert client.alerts == []
+        assert client.metrics is reg
+    finally:
+        srv.close()
+        client.shutdown()
+
+
+def test_top_cli_once(tmp_path):
+    """``tools/top.py --stream ... --once`` renders a frame from a JSONL
+    snapshot (the CI smoke path)."""
+    path = tmp_path / "t.jsonl"
+    reg = MetricsRegistry()
+    reg.gauge("region_occupancy", region=0).set(0.5)
+    reg.counter("tasks_done_total", tenant="a").inc(3)
+    mon = TelemetryMonitor(reg)
+    w = JsonlMetricsWriter(str(path))
+    mon.add_sink(w)
+    mon.sample()
+    w.close()
+    out = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "top.py"),
+         "--stream", str(path), "--once"],
+        capture_output=True, text=True, timeout=60)
+    assert out.returncode == 0, out.stderr
+    assert "regions" in out.stdout and "tenant shares" in out.stdout
+    assert "alerts: none" in out.stdout
+
+
+def test_telemetry_json_includes_monitor_state():
+    reg = MetricsRegistry()
+    mon = TelemetryMonitor(reg)
+    mon.sample()
+    doc = telemetry_json(reg)
+    assert doc["alerts"] == [] and "detectors" in doc and "slo" in doc

@@ -1,0 +1,169 @@
+#!/usr/bin/env python
+"""Live terminal view over a serve run's telemetry (DESIGN.md §12).
+
+The serve drivers expose two live sinks (``--metrics-port`` /
+``--metrics-stream``); this tool renders either one as a compact
+``top``-style screen: per-region occupancy bars, queue depth and max
+queue-wait per priority/tenant, tenant throughput shares, node health
+and energy, and whatever alerts the ``TelemetryMonitor`` has firing.
+
+    python tools/top.py --url http://127.0.0.1:9100     # poll HTTP
+    python tools/top.py --stream telemetry.jsonl        # tail JSONL
+    python tools/top.py --url ... --once                # one frame (CI)
+
+Only the standard library is used (``urllib`` against the stdlib
+metrics server), so the tool runs anywhere the repo does.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+import urllib.request
+
+BAR_W = 24
+
+
+def fetch_http(url: str, timeout: float = 2.0) -> dict:
+    """One telemetry snapshot from the serve driver's metrics server."""
+    with urllib.request.urlopen(f"{url.rstrip('/')}/telemetry.json",
+                                timeout=timeout) as resp:
+        return json.loads(resp.read().decode())
+
+
+def fetch_stream(path: str) -> dict:
+    """The newest complete snapshot from a ``--metrics-stream`` JSONL
+    file (the writer appends one line per sampler tick)."""
+    last = None
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                last = json.loads(line)
+            except json.JSONDecodeError:
+                continue          # a tick mid-write; keep the previous one
+    if last is None:
+        raise ValueError(f"{path}: no complete snapshot yet")
+    return last
+
+
+def _bar(frac: float, width: int = BAR_W) -> str:
+    frac = min(max(frac, 0.0), 1.0)
+    n = int(round(frac * width))
+    return "#" * n + "." * (width - n)
+
+
+def _gauges(snap: dict, name: str) -> list:
+    return snap.get("gauges", {}).get(name, [])
+
+
+def _counters(snap: dict, name: str) -> list:
+    return snap.get("counters", {}).get(name, [])
+
+
+def render(snap: dict, out=sys.stdout) -> None:
+    """One frame: regions, queues, tenants, nodes, alerts."""
+    w = out.write
+    w(f"repro top — uptime {snap.get('uptime_s', 0.0):7.1f}s, "
+      f"{snap.get('n_series', 0)} series\n")
+
+    occ = _gauges(snap, "region_occupancy")
+    if occ:
+        pool = _gauges(snap, "pool_regions")
+        n_regions = int(pool[0]["value"]) if pool else len(occ)
+        w(f"\nregions ({n_regions}):\n")
+        for g in sorted(occ, key=lambda g: g["labels"].get("region", "")):
+            rid = g["labels"].get("region", "?")
+            shell = g["labels"].get("shell")
+            label = f"{shell}/r{rid}" if shell else f"r{rid}"
+            w(f"  {label:<10} [{_bar(g['value'])}] {g['value']:5.0%}\n")
+
+    depth = _gauges(snap, "queue_depth")
+    if depth:
+        w("\nqueues:\n")
+        for g in depth:
+            shell = g["labels"].get("shell", "")
+            tag = f" ({shell})" if shell else ""
+            w(f"  depth{tag}: {int(g['value'])}\n")
+        waits = _gauges(snap, "queue_wait_max_seconds")
+        for g in sorted(waits, key=lambda g: str(g["labels"])):
+            if g["value"] <= 0:
+                continue
+            who = ", ".join(f"{k}={v}" for k, v in
+                            sorted(g["labels"].items()))
+            w(f"  max wait {who}: {g['value'] * 1e3:.0f}ms\n")
+
+    done = _counters(snap, "tasks_done_total")
+    toks = _counters(snap, "serving_tokens_total")
+    shares = done or toks
+    if shares:
+        total = sum(c["value"] for c in shares) or 1.0
+        unit = "tasks" if done else "tokens"
+        w(f"\ntenant shares ({unit}):\n")
+        for c in sorted(shares, key=lambda c: -c["value"]):
+            tenant = c["labels"].get("tenant", "default")
+            frac = c["value"] / total
+            w(f"  {tenant:<12} [{_bar(frac)}] {frac:5.0%} "
+              f"({int(c['value'])})\n")
+
+    health = _gauges(snap, "node_healthy")
+    if health:
+        joules = {g["labels"].get("node"): g["value"]
+                  for g in _gauges(snap, "node_energy_joules")}
+        w("\nnodes:\n")
+        for g in sorted(health, key=lambda g: g["labels"].get("node", "")):
+            node = g["labels"].get("node", "?")
+            state = "up" if g["value"] else "DOWN"
+            j = joules.get(node)
+            w(f"  node {node}: {state}"
+              + (f", {j:.1f} J" if j is not None else "") + "\n")
+
+    alerts = snap.get("alerts", [])
+    w(f"\nalerts ({len(alerts)} firing):\n" if alerts else "\nalerts: none\n")
+    for a in alerts:
+        w(f"  [{a.get('severity', '?')}:{a.get('name', '?')}] "
+          f"{a.get('message', '')}\n")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="top", description="live telemetry view for serve runs")
+    src = ap.add_mutually_exclusive_group(required=True)
+    src.add_argument("--url",
+                     help="metrics server base URL (serve --metrics-port)")
+    src.add_argument("--stream",
+                     help="telemetry JSONL file (serve --metrics-stream)")
+    ap.add_argument("--interval", type=float, default=1.0,
+                    help="refresh period in seconds")
+    ap.add_argument("--once", action="store_true",
+                    help="render a single frame and exit (CI mode)")
+    args = ap.parse_args(argv)
+
+    def frame() -> dict:
+        return (fetch_http(args.url) if args.url
+                else fetch_stream(args.stream))
+
+    while True:
+        try:
+            snap = frame()
+        except Exception as e:  # noqa: BLE001 — a dead server ends the view
+            if args.once:
+                print(f"top: no telemetry available ({e})", file=sys.stderr)
+                return 1
+            print(f"top: waiting for telemetry ({e})", file=sys.stderr)
+            time.sleep(args.interval)
+            continue
+        if not args.once:
+            sys.stdout.write("\x1b[2J\x1b[H")      # clear screen, home
+        render(snap)
+        sys.stdout.flush()
+        if args.once:
+            return 0
+        time.sleep(args.interval)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

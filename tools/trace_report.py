@@ -38,6 +38,13 @@ def load_trace(path: str) -> dict:
 def summarize(trace: dict) -> dict:
     """Reduce a Chrome trace to comparable scalars (all times seconds)."""
     events = trace["traceEvents"]
+    # ring-drop accounting: exporters record how many events the bounded
+    # tracer ring discarded before export (``otherData`` metadata) — a
+    # non-zero count means every figure below is computed from a
+    # truncated timeline and must be flagged, not reported as complete
+    other = trace.get("otherData", {}) or {}
+    dropped = int(other.get("dropped_events",
+                            other.get("events_dropped", 0)) or 0)
     track_names = {}                     # (pid, tid) -> display name
     proc_names = {}                      # pid -> display name
     counts = defaultdict(int)
@@ -84,6 +91,8 @@ def summarize(trace: dict) -> dict:
     return {
         "n_events": sum(counts.values()),
         "wall_s": wall,
+        "dropped_events": dropped,
+        "truncated": dropped > 0,
         "kinds": dict(sorted(counts.items())),
         "tracks": tracks,
         "preempt_response": {
@@ -102,6 +111,10 @@ def _fmt_s(x: float) -> str:
 def print_summary(path: str, s: dict, out=sys.stdout):
     w = out.write
     w(f"{path}: {s['n_events']} events over {_fmt_s(s['wall_s'])}\n")
+    if s.get("truncated"):
+        w(f"  WARNING: tracer ring dropped {s['dropped_events']} "
+          f"event(s) before export — busy time and event counts below "
+          f"are lower bounds from a truncated timeline\n")
     w("  events by kind:\n")
     for name, n in sorted(s["kinds"].items(), key=lambda kv: -kv[1]):
         w(f"    {name:<18} {n}\n")
