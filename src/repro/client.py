@@ -44,8 +44,10 @@ class Client:
     - ``backend=ClusterFrontend`` (anything with ``submit`` +
       ``shutdown``): adopts it as-is.
 
-    ``serving`` (a ``ServingConfig``) configures the lazily-created
-    token-serving engine behind ``stream()``.
+    ``serving`` (a ``ServingConfig``, or a kwargs dict for one — e.g.
+    ``serving={"lm": "attention"}`` to stream from the paged-KV attention
+    backend) configures the lazily-created token-serving engine behind
+    ``stream()``.
     """
 
     def __init__(self, backend=None, *, n_regions: int = 2,
@@ -136,6 +138,8 @@ class Client:
                 from repro.serving.engine import ServingConfig, ServingEngine
 
                 cfg = self._serving_cfg or ServingConfig()
+                if isinstance(cfg, dict):
+                    cfg = ServingConfig(**cfg)
                 self._engine = ServingEngine(self.backend, cfg).start()
             return self._engine
 

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-N_BUF_SLOTS = 4    # pointer args (HitTiles); unused slots hold (1,1) dummies
+N_BUF_SLOTS = 6    # pointer args (HitTiles); unused slots hold (1,1) dummies
 N_INT_ARGS = 8     # the paper pads to 8 integer scalars
 N_FLOAT_ARGS = 8   # ... and 8 float scalars
 

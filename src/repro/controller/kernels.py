@@ -38,6 +38,10 @@ class KernelDef:
     # engine threads a decode round's KV state straight into the next
     # round's ArgBundle without a host round trip.
     device_result: bool = False
+    # the kernel body dispatches Pallas (DESIGN.md §13): regions record
+    # the resolved interpret/compiled mode in their stats at reconfig
+    # time, so benches never silently measure the interpreter
+    pallas: bool = False
 
     def bundle(self, *bufs, **scalars) -> ArgBundle:
         """Build an ArgBundle from declared argument names."""
@@ -55,14 +59,16 @@ def ctrl_kernel(name: str, backend: str = "PYNQ",
                 float_args: Sequence[str] = (),
                 default_budget: int = 64,
                 footprint: int = 1,
-                device_result: bool = False):
+                device_result: bool = False,
+                pallas: bool = False):
     def deco(fn):
         kd = KernelDef(name=name, backend=backend, fn=fn,
                        ktile_args=tuple(ktile_args), int_args=tuple(int_args),
                        float_args=tuple(float_args),
                        default_budget=default_budget,
                        footprint=footprint,
-                       device_result=device_result)
+                       device_result=device_result,
+                       pallas=pallas)
         _REGISTRY[name] = kd
         return fn
 
@@ -71,8 +77,9 @@ def ctrl_kernel(name: str, backend: str = "PYNQ",
 
 def _register_builtin():
     # importing the task modules registers the paper's workload set (blur)
-    # and the token-serving prefill/decode kernels
+    # and the token-serving prefill/decode kernels (surrogate + attention)
     import repro.kernels.blur.tasks  # noqa: F401
+    import repro.serving.attention  # noqa: F401
     import repro.serving.kernels  # noqa: F401
 
 

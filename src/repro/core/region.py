@@ -102,6 +102,11 @@ class RegionStats:
     # megakernel accounting (DESIGN.md §10)
     megakernel_launches: int = 0  # single-dispatch launches
     flag_poll_exits: int = 0      # launches the device exited on the flag
+    # Pallas dispatch accounting (DESIGN.md §13): which mode the last
+    # Pallas-bearing bitstream resolved to ("interpret" | "compiled"),
+    # None until one loads — benches read this so they never silently
+    # measure the interpreter where a lowering exists
+    pallas_mode: Optional[str] = None
 
 
 class Region:
@@ -356,6 +361,9 @@ class Region:
         self.executable = fn
         self.stats.reconfigs += 1
         self.stats.reconfig_s += dt
+        if get_kernel(task.kernel).pallas:
+            from repro.kernels.pallas_support import pallas_mode
+            self.stats.pallas_mode = pallas_mode()
         task.n_reconfigs += 1
         tr = self.tracer
         if tr is not None:

@@ -121,7 +121,8 @@ _SHELL_RECONFIG = {
     "cache_size": "bitstreams currently cached",
     "per_key": "per-bitstream hit/miss/eviction detail",
     "prefetcher": "prefetch worker queue counters",
-    "regions": "per-region reconfig/chunk counters",
+    "regions": "per-region reconfig/chunk counters, incl. pallas_mode "
+               "(interpret | compiled) of the last Pallas bitstream",
 }
 
 _CLUSTER = {
@@ -161,7 +162,8 @@ _SERVING = {
     "wall_s": "first submit to last sequence completion",
     "ttft_p50_s": "median time-to-first-token (submit -> prefill token)",
     "ttft_p99_s": "p99 time-to-first-token",
-    "prefill_tasks": "prefill tasks dispatched (one per sequence)",
+    "prefill_tasks": "prefill tasks dispatched (the attention LM packs "
+                     "up to prefill_batch sequences into one)",
     "decode_rounds": "decode round tasks dispatched",
     "slot_inserts": "sequences admitted into a decode slot",
     "slot_evictions": "finished sequences evicted from their slot",
@@ -170,6 +172,10 @@ _SERVING = {
     "decode_migrations": "cross-region/shell moves of decode rounds",
     "state_device_rounds": "rounds whose KV state stayed device-resident",
     "engine_mode": "region engine the backend shell runs (None = cluster)",
+    "lm": "model backend serving the tokens: surrogate | attention",
+    "kv": "paged-KV block-pool stats (blocks_total/in_use/peak, occupancy, "
+          "evictions, reuse, alloc_deferred; DESIGN.md §13) — None for "
+          "LMs without a KV cache",
     "trace": _TRACE_DOC,
     "telemetry": _TELEMETRY_DOC,
 }

@@ -178,7 +178,8 @@ class Shell:
                     "chunks_discarded": r.stats.chunks_discarded,
                     "host_spills_avoided": r.stats.host_spills_avoided,
                     "megakernel_launches": r.stats.megakernel_launches,
-                    "flag_poll_exits": r.stats.flag_poll_exits}
+                    "flag_poll_exits": r.stats.flag_poll_exits,
+                    "pallas_mode": r.stats.pallas_mode}
             for r in self.regions
         }
         return stamp("shell_reconfig", rep)

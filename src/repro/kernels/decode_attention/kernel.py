@@ -22,7 +22,7 @@ NEG_INF = -1e30
 def _dec_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, scale, window,
                 bk, S):
     hd = q_ref.shape[-1]
-    pos = pos_ref[0]  # tokens written (current token abs pos = pos-1)
+    pos = pos_ref[0]  # this row's tokens written (current abs pos = pos-1)
     q = q_ref[0, 0].astype(jnp.float32) * scale  # [1, hd]
     q_pos = pos - 1
 
@@ -57,8 +57,12 @@ def _dec_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, scale, window,
 
 def decode_attention_pallas(q, k_cache, v_cache, pos, *, window=None,
                             scale=None, bk=128, interpret=True):
-    """q: [B,H,1,hd]; caches [B,KV,S,hd]; pos: scalar int32 (tokens written,
-    current token included).  Returns [B,H,1,hd]."""
+    """q: [B,H,1,hd]; caches [B,KV,S,hd]; pos: scalar int32 or i32[B]
+    (tokens written per row, current token included).  Returns [B,H,1,hd].
+
+    A scalar ``pos`` broadcasts to every row (the single-stream decode
+    loop); a per-batch vector is the paged multi-slot path, where each
+    resident sequence sits at its own absolute position."""
     B, H, _, hd = q.shape
     KV, S = k_cache.shape[1], k_cache.shape[2]
     g = H // KV
@@ -67,12 +71,15 @@ def decode_attention_pallas(q, k_cache, v_cache, pos, *, window=None,
     assert S % bk == 0
 
     kern = partial(_dec_kernel, scale=scale, window=window, bk=bk, S=S)
-    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (1,))
+    pos_arr = jnp.asarray(pos, jnp.int32)
+    if pos_arr.ndim == 0:
+        pos_arr = jnp.broadcast_to(pos_arr, (B,))
+    assert pos_arr.shape == (B,), pos_arr.shape
     return pl.pallas_call(
         kern,
         grid=(B, H),
         in_specs=[
-            pl.BlockSpec((1,), lambda b, h: (0,)),
+            pl.BlockSpec((1,), lambda b, h: (b,)),
             pl.BlockSpec((1, 1, 1, hd), lambda b, h: (b, h, 0, 0)),
             pl.BlockSpec((1, 1, S, hd), lambda b, h: (b, h // g, 0, 0)),
             pl.BlockSpec((1, 1, S, hd), lambda b, h: (b, h // g, 0, 0)),

@@ -1,4 +1,16 @@
-"""jit wrapper for the decode-attention kernel (head-dim padded to 128)."""
+"""jit wrappers for the decode-attention kernel (head-dim padded to 128).
+
+Two entry points:
+
+- ``decode_attention`` — contiguous (ring or linear) caches, the PR-4
+  surface, now with per-batch positions and backend-auto Pallas dispatch
+  (``interpret=None`` resolves via ``kernels.pallas_support``);
+- ``paged_decode_attention`` — the serving path: per-sequence block
+  tables over a shared fixed-size KV block pool.  The pages are gathered
+  into a per-row linear cache (one XLA gather — the "block-table walk")
+  and handed to the same Pallas kernel; a linear cache is an unwrapped
+  ring, so the ring's position mask applies unchanged.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -8,11 +20,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.pallas_support import resolve_interpret
 
 
 @partial(jax.jit, static_argnames=("window", "bk", "interpret"))
 def decode_attention(q, k_cache, v_cache, pos, *, window: Optional[int] = None,
-                     bk: int = 128, interpret: bool = True):
+                     bk: int = 128, interpret: Optional[bool] = None):
+    """q: [B,H,1,hd]; caches [B,KV,S,hd]; pos scalar or i32[B]."""
     hd = q.shape[-1]
     pad = (-hd) % 128
     scale = 1.0 / (hd ** 0.5)
@@ -20,5 +34,37 @@ def decode_attention(q, k_cache, v_cache, pos, *, window: Optional[int] = None,
         zp = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, 0), (0, pad)))
         q, k_cache, v_cache = zp(q), zp(k_cache), zp(v_cache)
     o = decode_attention_pallas(q, k_cache, v_cache, pos, window=window,
-                                scale=scale, bk=bk, interpret=interpret)
+                                scale=scale, bk=bk,
+                                interpret=resolve_interpret(interpret))
     return o[..., :hd]
+
+
+def gather_kv_pages(pool, tables):
+    """Walk block tables into per-row linear caches.
+
+    pool: [NB, BS, KV, hd] (all resident pages, block 0 = the reserved
+    null page); tables: i32[B, T_blk] of page ids per row.  Returns
+    [B, KV, T_blk*BS, hd] — row b's pages laid out contiguously in table
+    order, i.e. exactly the dense cache a contiguous allocation would
+    have produced (the paged-vs-dense parity tests assert this)."""
+    NB, BS, KV, hd = pool.shape
+    B, T_blk = tables.shape
+    pages = pool[tables]                       # [B, T_blk, BS, KV, hd]
+    lin = pages.reshape(B, T_blk * BS, KV, hd)
+    return lin.transpose(0, 2, 1, 3)           # [B, KV, L, hd]
+
+
+@partial(jax.jit, static_argnames=("window", "bk", "interpret"))
+def paged_decode_attention(q, k_pool, v_pool, tables, pos, *,
+                           window: Optional[int] = None, bk: int = 128,
+                           interpret: Optional[bool] = None):
+    """Batched paged decode: one call covers every slot's query row.
+
+    q: [B,H,1,hd]; pools [NB,BS,KV,hd]; tables i32[B,T_blk]; pos i32[B]
+    (tokens written per row, current token included).  Returns
+    [B,H,1,hd].  Rows are independent: row b reads only the pages its
+    table names, so batch composition can never perturb a stream."""
+    k_lin = gather_kv_pages(k_pool, tables)
+    v_lin = gather_kv_pages(v_pool, tables)
+    return decode_attention(q, k_lin, v_lin, pos, window=window, bk=bk,
+                            interpret=interpret)

@@ -21,13 +21,15 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
-def _fa_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal, window,
-               bq, bk, S, T):
-    # refs (leading (1,1) block dims): q [1,1,bq,hd]; k/v [1,1,S,hd]
+def _fa_kernel(qoff_ref, q_ref, k_ref, v_ref, o_ref, *, scale, causal,
+               window, bq, bk, S, T):
+    # refs (leading (1,1) block dims): q [1,1,bq,hd]; k/v [1,1,S,hd];
+    # qoff [1] — absolute position of query row 0 (default S - T)
     iq = pl.program_id(2)
     hd = q_ref.shape[-1]
     q = q_ref[0, 0].astype(jnp.float32) * scale
-    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0) + (S - T)
+    q_pos = (iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+             + qoff_ref[0])
 
     n_kb = S // bk
 
@@ -59,9 +61,16 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal, window,
 
 
 def flash_attention_pallas(q, k, v, *, causal=True, window=None, scale=None,
-                           bq=128, bk=128, interpret=True):
-    """q: [B,H,T,hd]; k,v: [B,KV,S,hd].  Queries are the last T of S
-    positions (prefill: T == S).  Returns [B,H,T,hd]."""
+                           bq=128, bk=128, interpret=True, q_offset=None):
+    """q: [B,H,T,hd]; k,v: [B,KV,S,hd].  Returns [B,H,T,hd].
+
+    ``q_offset`` is the absolute position of query row 0 within the S key
+    positions; the default (``S - T``) keeps the original contract that
+    queries are the last T of S (prefill: T == S).  Chunked prefill
+    passes the segment start instead — which may be a traced value, so
+    it enters the kernel as a scalar input, never a compile-time
+    constant — letting a T-wide query slab attend causally against a
+    cache that is still being filled."""
     B, H, T, hd = q.shape
     KV, S = k.shape[1], k.shape[2]
     g = H // KV
@@ -69,6 +78,9 @@ def flash_attention_pallas(q, k, v, *, causal=True, window=None, scale=None,
     bq = min(bq, T)
     bk = min(bk, S)
     assert T % bq == 0 and S % bk == 0, (T, bq, S, bk)
+    if q_offset is None:
+        q_offset = S - T
+    qoff = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (1,))
 
     kern = partial(_fa_kernel, scale=scale, causal=causal, window=window,
                    bq=bq, bk=bk, S=S, T=T)
@@ -76,6 +88,7 @@ def flash_attention_pallas(q, k, v, *, causal=True, window=None, scale=None,
         kern,
         grid=(B, H, T // bq),
         in_specs=[
+            pl.BlockSpec((1,), lambda b, h, i: (0,)),
             pl.BlockSpec((1, 1, bq, hd), lambda b, h, i: (b, h, i, 0)),
             pl.BlockSpec((1, 1, S, hd), lambda b, h, i: (b, h // g, 0, 0)),
             pl.BlockSpec((1, 1, S, hd), lambda b, h, i: (b, h // g, 0, 0)),
@@ -83,4 +96,4 @@ def flash_attention_pallas(q, k, v, *, causal=True, window=None, scale=None,
         out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i: (b, h, i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, H, T, hd), q.dtype),
         interpret=interpret,
-    )(q, k, v)
+    )(qoff, q, k, v)

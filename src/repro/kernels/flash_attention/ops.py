@@ -1,5 +1,8 @@
 """jit wrapper for the flash-attention kernel: pads head_dim to 128 lanes
-(h2o-danube's hd=120), dispatches Pallas (interpret on CPU, compiled on TPU).
+(h2o-danube's hd=120), dispatches Pallas with backend-auto mode selection
+(``interpret=None`` resolves via ``kernels.pallas_support`` — interpret on
+CPU, compiled where a lowering exists), and forwards ``q_offset`` for the
+chunked-prefill path (queries that are NOT the last T of S positions).
 """
 from __future__ import annotations
 
@@ -10,13 +13,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.pallas_support import resolve_interpret
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
                                    "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True,
                     window: Optional[int] = None,
-                    bq: int = 128, bk: int = 128, interpret: bool = True):
+                    bq: int = 128, bk: int = 128,
+                    interpret: Optional[bool] = None, q_offset=None):
     """q: [B,H,T,hd]; k,v: [B,KV,S,hd] -> [B,H,T,hd]."""
     hd = q.shape[-1]
     pad = (-hd) % 128
@@ -25,5 +30,7 @@ def flash_attention(q, k, v, *, causal: bool = True,
         zp = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, 0), (0, pad)))
         q, k, v = zp(q), zp(k), zp(v)
     o = flash_attention_pallas(q, k, v, causal=causal, window=window,
-                               scale=scale, bq=bq, bk=bk, interpret=interpret)
+                               scale=scale, bq=bq, bk=bk,
+                               interpret=resolve_interpret(interpret),
+                               q_offset=q_offset)
     return o[..., :hd]

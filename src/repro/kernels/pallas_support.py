@@ -1,0 +1,37 @@
+"""Backend-aware Pallas dispatch mode shared by the attention kernels.
+
+The kernel wrappers historically hard-defaulted ``interpret=True`` — safe
+everywhere, but a silent trap on TPU/GPU where it benchmarks the Pallas
+*interpreter* instead of the compiled kernel.  ``resolve_interpret``
+auto-selects per backend (interpret on CPU, compiled where Mosaic/Triton
+lowering exists) while keeping an explicit ``interpret=`` argument as a
+hard override; ``pallas_mode`` names the resolved choice so region stats
+and serving reports can surface what the benches actually measured.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+# backends with a real Pallas lowering path; everything else interprets
+_COMPILED_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Pick the Pallas dispatch mode for the current JAX backend.
+
+    ``interpret=None`` (the auto default) resolves to compiled Pallas on
+    backends that can lower it and the interpreter elsewhere (CPU).  An
+    explicit True/False is honored unchanged — tests force the
+    interpreter, and benches can force compiled to fail loudly on a
+    backend that cannot lower."""
+    if interpret is not None:
+        return bool(interpret)
+    return jax.default_backend().lower() not in _COMPILED_BACKENDS
+
+
+def pallas_mode(interpret: Optional[bool] = None) -> str:
+    """Human-readable name of the resolved mode: ``interpret`` |
+    ``compiled`` (what region stats / reports expose)."""
+    return "interpret" if resolve_interpret(interpret) else "compiled"

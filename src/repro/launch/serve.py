@@ -480,7 +480,8 @@ def serve_cluster(*, n_shells: int = 2, regions_per_shell: int = 1,
 
 def serve_decode(*, n_sequences: int = 6, prompt_len: int = 12,
                  max_new: int = 12, slots: int = 4, round_tokens: int = 4,
-                 d_model: int = 384, vocab: int = 51865, n_regions: int = 2,
+                 d_model: int = None, vocab: int = None,
+                 lm: str = "surrogate", n_regions: int = 2,
                  disaggregate: bool = True, preempt_every: int = 0,
                  partial_s: float = 0.0, seed: int = 0, verify: bool = True,
                  metrics_out: str = None, quiet: bool = False,
@@ -490,14 +491,16 @@ def serve_decode(*, n_sequences: int = 6, prompt_len: int = 12,
     """Token-serving driver (DESIGN.md §9): submit ``n_sequences``
     generation requests through the continuous-batching ``ServingEngine``
     over a preemptive scheduler, verify every streamed sequence against
-    the NumPy oracle (bit-identity regardless of batching/preemption),
-    and return the ``serving``-layer report.
+    its oracle (bit-identity regardless of batching/preemption), and
+    return the ``serving``-layer report.
 
     ``disaggregate=True`` pins decode rounds to the last region (its
-    ``SeqDecode`` bitstream stays permanently warm) and prefills to the
-    others; ``preempt_every=N`` checkpoint-preempts every Nth decode
-    round mid-flight (the streams must still verify).  Defaults are
-    whisper_tiny scale (d_model=384, vocab=51865).
+    decode bitstream stays permanently warm) and prefills to the others;
+    ``preempt_every=N`` checkpoint-preempts every Nth decode round
+    mid-flight (the streams must still verify).  ``lm`` selects the model
+    backend: ``surrogate`` (integer-hash state, whisper_tiny scale
+    d_model=384 / vocab=51865) or ``attention`` (real paged-KV attention
+    decode over Pallas kernels, DESIGN.md §13; d_model=64 / vocab=101).
     """
     import json
     import threading
@@ -508,6 +511,10 @@ def serve_decode(*, n_sequences: int = 6, prompt_len: int = 12,
     from repro.serving.kernels import oracle_stream
     from repro.serving.sequence import SamplingParams
 
+    if d_model is None:
+        d_model = 64 if lm == "attention" else 384
+    if vocab is None:
+        vocab = 101 if lm == "attention" else 51865
     rng = np.random.default_rng(seed)
     # probing needs real mid-round boundaries: one token per chunk, and
     # stretched chunks so the probe lands before the round drains (same
@@ -537,18 +544,27 @@ def serve_decode(*, n_sequences: int = 6, prompt_len: int = 12,
     else:
         prefill_pin = decode_pin = None
     cfg = ServingConfig(d_model=d_model, vocab_size=vocab, max_slots=slots,
-                        round_tokens=round_tokens,
+                        round_tokens=round_tokens, lm=lm,
                         prefill_regions=prefill_pin,
                         decode_regions=decode_pin,
                         preempt_probe_every=preempt_every)
     engine = ServingEngine(sched, cfg).start()
     tele.start(scheduler=sched, serving=engine)
 
+    if lm == "attention":
+        from repro.serving.attention import (AttentionParams,
+                                             attention_oracle_stream)
+        ap = AttentionParams(d_model=d_model, vocab=vocab)
     specs, handles = [], []
     for i in range(n_sequences):
         plen = int(rng.integers(2, prompt_len + 1))
         prompt = [int(x) for x in rng.integers(0, vocab, size=plen)]
         mx = int(rng.integers(2, max_new + 1))
+        if lm == "attention":
+            # KV capacity bound: prompt + max_new - 1 positions <= max_ctx
+            plen = min(plen, ap.max_ctx - 1)
+            prompt = prompt[:plen]
+            mx = min(mx, ap.max_ctx - plen + 1)
         specs.append((prompt, i, mx))
         handles.append(engine.submit(
             prompt, SamplingParams(max_new_tokens=mx, seed=i)))
@@ -557,7 +573,13 @@ def serve_decode(*, n_sequences: int = 6, prompt_len: int = 12,
     for h, (prompt, sd, mx) in zip(handles, specs):
         got = h.result(timeout=300.0)
         if verify:
-            ref = oracle_stream(prompt, sd, mx, d_model, vocab)
+            if lm == "attention":
+                ref = attention_oracle_stream(
+                    prompt, mx, ap, max_slots=slots,
+                    round_tokens=round_tokens,
+                    prefill_batch=cfg.prefill_batch)
+            else:
+                ref = oracle_stream(prompt, sd, mx, d_model, vocab)
             if got != ref:
                 mismatches += 1
                 print(f"[decode] sequence #{h.sid} MISMATCH: "
@@ -575,8 +597,9 @@ def serve_decode(*, n_sequences: int = 6, prompt_len: int = 12,
     if not quiet:
         mode = "disaggregated" if disaggregate else "shared"
         print(f"[decode] {rep['n_finished']}/{n_sequences} sequences "
-              f"({mode}, {slots} slots x {round_tokens} tok rounds): "
-              f"{rep['tokens_out']} tokens at {rep['tokens_per_s']:.1f} "
+              f"({rep['lm']}, {mode}, {slots} slots x {round_tokens} "
+              f"tok rounds): {rep['tokens_out']} tokens at "
+              f"{rep['tokens_per_s']:.1f} "
               f"tok/s, ttft p50 {rep['ttft_p50_s']*1000:.0f}ms / "
               f"p99 {rep['ttft_p99_s']*1000:.0f}ms")
         print(f"[decode] {rep['prefill_tasks']} prefills, "
@@ -585,6 +608,13 @@ def serve_decode(*, n_sequences: int = 6, prompt_len: int = 12,
               f"{rep['decode_preemptions']} mid-decode preemptions, "
               f"{rep['decode_migrations']} migrations, "
               f"{rep['stranded_sequences']} stranded")
+        if rep.get("kv"):
+            kv = rep["kv"]
+            print(f"[decode] kv pool: {kv['blocks_peak']}/"
+                  f"{kv['blocks_total']} blocks peak "
+                  f"({kv['block_size']} tok/block), "
+                  f"{kv['evictions']} evictions, {kv['reuse']} reused, "
+                  f"{kv['alloc_deferred']} admissions deferred")
     if verify and mismatches:
         raise SystemExit(
             f"[decode] {mismatches} sequence(s) diverged from the oracle")
@@ -733,9 +763,16 @@ def main(argv=None):
                     help="decode slots per round (continuous batch width)")
     dc.add_argument("--round-tokens", type=int, default=4,
                     help="tokens per decode round (admission granularity)")
-    dc.add_argument("--d-model", type=int, default=384,
-                    help="surrogate LM state width (whisper_tiny default)")
-    dc.add_argument("--vocab", type=int, default=51865)
+    dc.add_argument("--lm", choices=("surrogate", "attention"),
+                    default="surrogate",
+                    help="model backend: integer-hash surrogate or real "
+                         "paged-KV attention decode (DESIGN.md §13)")
+    dc.add_argument("--d-model", type=int, default=None,
+                    help="LM state width (default: 384 surrogate / "
+                         "64 attention)")
+    dc.add_argument("--vocab", type=int, default=None,
+                    help="vocabulary size (default: 51865 surrogate / "
+                         "101 attention)")
     dc.add_argument("--regions", type=int, default=2)
     dc.add_argument("--no-disaggregate", action="store_true",
                     help="share all regions between prefill and decode "
@@ -788,7 +825,7 @@ def main(argv=None):
         serve_decode(n_sequences=args.sequences, prompt_len=args.prompt_len,
                      max_new=args.max_new, slots=args.slots,
                      round_tokens=args.round_tokens, d_model=args.d_model,
-                     vocab=args.vocab, n_regions=args.regions,
+                     vocab=args.vocab, lm=args.lm, n_regions=args.regions,
                      disaggregate=not args.no_disaggregate,
                      preempt_every=args.preempt_every,
                      partial_s=args.partial_s, seed=args.seed,

@@ -6,7 +6,10 @@ Lazy exports: ``controller.kernels._register_builtin`` imports
 engine (and its scheduler imports) into every kernel lookup.
 """
 _EXPORTS = {
+    "AttentionLM": "repro.serving.attention",
+    "AttentionParams": "repro.serving.attention",
     "SamplingParams": "repro.serving.sequence",
+    "attention_oracle_stream": "repro.serving.attention",
     "Sequence": "repro.serving.sequence",
     "SequenceCancelled": "repro.serving.sequence",
     "SequenceError": "repro.serving.sequence",

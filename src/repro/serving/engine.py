@@ -53,10 +53,15 @@ SLOTS_W = 8         # SeqDecode slots-table width (3 columns used)
 
 @dataclass
 class ServingConfig:
-    """Engine knobs.  ``d_model``/``vocab_size`` parameterize the
-    surrogate LM; ``max_slots``/``round_tokens`` size the decode round
-    (S sequences x R tokens); ``prompt_pad`` buckets prompt lengths so
-    every prefill of a bucket shares one bitstream."""
+    """Engine knobs.  ``lm`` selects the model backend: ``"surrogate"``
+    (the deterministic integer LM) or ``"attention"`` (the paged-KV real
+    attention path, DESIGN.md §13).  ``d_model``/``vocab_size``
+    parameterize either LM; ``max_slots``/``round_tokens`` size the
+    decode round (S sequences x R tokens); ``prompt_pad`` buckets
+    surrogate prompt lengths so every prefill of a bucket shares one
+    bitstream (the attention LM always pads to ``max_ctx`` instead, so
+    one prefill bitstream serves every batch bit-identically)."""
+    lm: str = "surrogate"
     d_model: int = 64
     vocab_size: int = 101
     max_slots: int = 4
@@ -77,14 +82,134 @@ class ServingConfig:
     # then requests a preempt on its region — the round checkpoint-resumes
     # and must stream bit-identical tokens.
     preempt_probe_every: int = 0
+    # attention-LM knobs (ignored by the surrogate): model geometry,
+    # KV page size, context capacity, and the pool size (None = enough
+    # pages for every slot to hold max_ctx, so admission never blocks)
+    attn_heads: int = 4
+    attn_kv_heads: int = 2
+    attn_head_dim: int = 16
+    kv_block_size: int = 8
+    max_ctx: int = 64
+    kv_blocks: Optional[int] = None
+    weights_seed: int = 7
+    # sequences packed into one prefill task (attention LM; the
+    # surrogate keeps its one-task-per-sequence prefill path)
+    prefill_batch: int = 1
 
     def validate(self) -> "ServingConfig":
         for name in ("d_model", "vocab_size", "max_slots", "round_tokens",
-                     "prompt_pad", "max_prefills_inflight"):
+                     "prompt_pad", "max_prefills_inflight", "prefill_batch"):
             if getattr(self, name) < 1:
                 raise ValueError(f"{name} must be >= 1, "
                                  f"got {getattr(self, name)}")
+        if self.lm not in ("surrogate", "attention"):
+            raise ValueError(f"unknown lm {self.lm!r}; "
+                             f"known: ('surrogate', 'attention')")
         return self
+
+
+class SurrogateLM:
+    """The integer-surrogate LM behind the engine's backend interface.
+
+    The engine is LM-agnostic: a backend builds prefill/decode
+    ArgBundles, harvests their result buffers, and owns whatever
+    per-sequence state the model threads between tasks.  This one keeps
+    the PR-5 behaviour exactly: one prefill task per sequence, a
+    device-resident ``[S, D]`` hidden-state block threaded
+    round-to-round, no KV pages."""
+
+    name = "surrogate"
+    prefill_batch = 1
+
+    def __init__(self, cfg, metrics=None):
+        self.cfg = cfg
+        self._state: Dict[int, object] = {}   # sid -> device state [1, D]
+        self._round_state = None              # device [S, D] or None
+
+    # -- admission -------------------------------------------------------
+    def reject(self, seq) -> Optional[str]:
+        return None
+
+    def can_admit(self, seq) -> bool:
+        return True
+
+    # -- prefill ---------------------------------------------------------
+    def prefill_bundle(self, seqs):
+        from repro.controller.kernels import get_kernel
+
+        cfg = self.cfg
+        (seq,) = seqs
+        P = -(-len(seq.prompt) // cfg.prompt_pad) * cfg.prompt_pad
+        prompt = np.zeros((1, P), np.int32)
+        prompt[0, :len(seq.prompt)] = seq.prompt
+        out = np.zeros((1, PREFILL_OUT_W), np.int32)
+        state = init_state(seq.params.seed, cfg.d_model)[None, :]
+        kd = get_kernel("SeqPrefill")
+        return "SeqPrefill", kd.bundle(
+            out, state, prompt, P=P, D=cfg.d_model, vocab=cfg.vocab_size,
+            prompt_len=len(seq.prompt))
+
+    def harvest_prefill(self, seqs, bufs) -> List[int]:
+        (seq,) = seqs
+        self._state[seq.sid] = bufs[1]  # device-resident [1, D]
+        return [int(np.asarray(bufs[0])[0, 0])]
+
+    # -- decode ----------------------------------------------------------
+    def decode_bundle(self, occupied, inserted, n_emit):
+        from repro.controller.kernels import get_kernel
+
+        cfg = self.cfg
+        S, R, D = cfg.max_slots, cfg.round_tokens, cfg.d_model
+        slots_tbl = np.zeros((S, SLOTS_W), np.int32)
+        for i, seq in occupied:
+            slots_tbl[i, COL_ACTIVE] = 1
+            slots_tbl[i, COL_N_EMIT] = n_emit[i]
+            slots_tbl[i, COL_LAST_TOK] = seq.tokens[-1]
+
+        # state composition: start from last round's device-resident state
+        # when we have one (rows of evicted slots are stale but inactive),
+        # else a fresh zero block; splice prefilled state into new slots.
+        if self._round_state is not None:
+            state = self._round_state
+            device_resident = not inserted
+        else:
+            state = jnp.zeros((S, D), jnp.int32)
+            device_resident = False
+        by_slot = dict(occupied)
+        for i in inserted:
+            state = state.at[i, :].set(self._state.pop(by_slot[i].sid)[0])
+        out = np.zeros((S, R), np.int32)
+        kd = get_kernel("SeqDecode")
+        return "SeqDecode", kd.bundle(out, state, slots_tbl, S=S, D=D, R=R,
+                                      vocab=cfg.vocab_size), device_resident
+
+    def finish_round(self, bufs) -> np.ndarray:
+        self._round_state = bufs[1]   # device-resident into the next round
+        return np.asarray(bufs[0])
+
+    def fail_round(self):
+        self._round_state = None
+
+    def drop(self, sid: int):
+        self._state.pop(sid, None)
+
+    # -- observability ---------------------------------------------------
+    def kv_stats(self) -> Optional[dict]:
+        return None
+
+    def trace_attrs(self) -> dict:
+        return {}
+
+
+def make_lm(cfg, metrics=None):
+    """Backend factory for ``ServingConfig.lm``."""
+    if cfg.lm == "surrogate":
+        return SurrogateLM(cfg, metrics=metrics)
+    if cfg.lm == "attention":
+        from repro.serving.attention import AttentionLM
+
+        return AttentionLM(cfg, metrics=metrics)
+    raise ValueError(f"unknown lm {cfg.lm!r}")
 
 
 @dataclass
@@ -128,16 +253,17 @@ class ServingEngine:
         self.metrics = getattr(backend, "metrics", None)
         self._trace_track = ("serving", 0)
         self.cfg = (config or ServingConfig()).validate()
+        # the LM backend: builds prefill/decode bundles, owns the model
+        # state threaded between tasks (hidden-state block or KV pools)
+        self.lm = make_lm(self.cfg, metrics=self.metrics)
         self._slot_t0: List[Optional[float]] = [None] * self.cfg.max_slots
         self.stats = _Stats()
         self._lock = threading.Lock()
         self._work = threading.Event()
         self._waiting: deque = deque()            # (seq, handle)
-        self._prefills: List[tuple] = []          # (seq, handle, task_handle)
+        self._prefills: List[tuple] = []          # (seqs, handles, th)
         self._ready: deque = deque()              # (seq, handle)
         self._slots: List[Optional[tuple]] = [None] * self.cfg.max_slots
-        self._state: Dict[int, object] = {}       # sid -> device state [1, D]
-        self._round_state = None                  # device [S, D] or None
         self._handles: Dict[int, SequenceHandle] = {}
         self._stop = threading.Event()
         self._drain = threading.Event()
@@ -183,10 +309,13 @@ class ServingEngine:
                         q.remove(item)
                         self._settle(item[0], SequenceStatus.CANCELLED)
                         return True
-            for i, (seq, handle, th) in enumerate(list(self._prefills)):
-                if seq.sid == sid and th.cancel():
+            for i, (seqs, handles, th) in enumerate(list(self._prefills)):
+                # a batched prefill is cancellable only when the whole
+                # task is this one sequence — batch-mates must not be
+                # collateral damage
+                if (len(seqs) == 1 and seqs[0].sid == sid and th.cancel()):
                     self._prefills.pop(i)
-                    self._settle(seq, SequenceStatus.CANCELLED)
+                    self._settle(seqs[0], SequenceStatus.CANCELLED)
                     return True
         return False
 
@@ -266,10 +395,11 @@ class ServingEngine:
             while self._ready:
                 seq, _ = self._ready.popleft()
                 self._settle(seq, SequenceStatus.CANCELLED)
-            for seq, handle, th in list(self._prefills):
+            for seqs, handles, th in list(self._prefills):
                 if th.cancel():
-                    self._prefills.remove((seq, handle, th))
-                    self._settle(seq, SequenceStatus.CANCELLED)
+                    self._prefills.remove((seqs, handles, th))
+                    for seq in seqs:
+                        self._settle(seq, SequenceStatus.CANCELLED)
 
     # -- prefill path ----------------------------------------------------
     def _dispatch_prefills(self):
@@ -279,83 +409,95 @@ class ServingEngine:
                 if (not self._waiting
                         or len(self._prefills) >= cfg.max_prefills_inflight):
                     return
-                seq, handle = self._waiting.popleft()
-            P = -(-len(seq.prompt) // cfg.prompt_pad) * cfg.prompt_pad
-            prompt = np.zeros((1, P), np.int32)
-            prompt[0, :len(seq.prompt)] = seq.prompt
-            out = np.zeros((1, PREFILL_OUT_W), np.int32)
-            state = init_state(seq.params.seed, cfg.d_model)[None, :]
-            from repro.controller.kernels import get_kernel
-
-            kd = get_kernel("SeqPrefill")
+                batch = []
+                while self._waiting and len(batch) < self.lm.prefill_batch:
+                    batch.append(self._waiting.popleft())
+            seqs, handles = [], []
+            for seq, handle in batch:
+                err = self.lm.reject(seq)
+                if err is not None:
+                    with self._lock:
+                        self._settle(seq, SequenceStatus.FAILED,
+                                     SequenceError(err))
+                    continue
+                seqs.append(seq)
+                handles.append(handle)
+            if not seqs:
+                continue
+            kernel, bundle = self.lm.prefill_bundle(seqs)
             task = Task(
-                kernel="SeqPrefill",
-                args=kd.bundle(out, state, prompt, P=P, D=cfg.d_model,
-                               vocab=cfg.vocab_size,
-                               prompt_len=len(seq.prompt)),
+                kernel=kernel, args=bundle,
                 priority=cfg.prefill_priority,
-                tenant=seq.tenant, phase="prefill", sequence=seq.sid,
+                tenant=seqs[0].tenant, phase="prefill",
+                sequence=(seqs[0].sid if len(seqs) == 1
+                          else tuple(s.sid for s in seqs)),
                 region_pin=(frozenset(cfg.prefill_regions)
                             if cfg.prefill_regions is not None else None),
             )
             th = self.backend.submit(task)
-            if self.tracer is not None:
-                self.tracer.emit("prefill_dispatch", self._trace_track,
-                                 tid=seq.sid)
-            seq.status = SequenceStatus.PREFILLING
+            for seq in seqs:
+                if self.tracer is not None:
+                    self.tracer.emit("prefill_dispatch", self._trace_track,
+                                     tid=seq.sid)
+                seq.status = SequenceStatus.PREFILLING
             with self._lock:
-                self._prefills.append((seq, handle, th))
+                self._prefills.append((seqs, handles, th))
                 self.stats.prefill_tasks += 1
 
     def _harvest_prefills(self):
         with self._lock:
             batch = list(self._prefills)
-        for seq, handle, th in batch:
+        for seqs, handles, th in batch:
             if not th.done():
                 continue
             with self._lock:
-                self._prefills.remove((seq, handle, th))
+                self._prefills.remove((seqs, handles, th))
             try:
                 bufs = th.result(0)
-            except Exception as exc:  # noqa: BLE001 — fail just this seq
+            except Exception as exc:  # noqa: BLE001 — fail just this batch
                 with self._lock:
-                    self._settle(seq, SequenceStatus.FAILED, exc)
+                    for seq in seqs:
+                        self._settle(seq, SequenceStatus.FAILED, exc)
                 continue
-            first = int(np.asarray(bufs[0])[0, 0])
-            with self._lock:
-                self._state[seq.sid] = bufs[1]  # device-resident [1, D]
-                seq.t_first_token = time.perf_counter()
-                self.stats.ttfts.append(seq.time_to_first_token)
-                seq.tokens.append(first)
-                self.stats.tokens_out += 1
-            if self.tracer is not None:
-                self.tracer.emit("ttft", self._trace_track, tid=seq.sid,
-                                 ttft_s=seq.time_to_first_token)
-            if self.metrics is not None:
-                self.metrics.histogram(
-                    "serving_ttft_seconds", tenant=seq.tenant,
-                ).observe(seq.time_to_first_token)
-                self.metrics.counter("serving_tokens_total",
-                                     tenant=seq.tenant).inc()
-            handle._push([first])
-            if len(seq.tokens) >= seq.params.max_new_tokens:
+            firsts = self.lm.harvest_prefill(seqs, bufs)
+            for seq, handle, first in zip(seqs, handles, firsts):
                 with self._lock:
-                    self._state.pop(seq.sid, None)
-                    self._settle(seq, SequenceStatus.FINISHED)
-            else:
-                seq.status = SequenceStatus.READY
-                with self._lock:
-                    self._ready.append((seq, handle))
+                    seq.t_first_token = time.perf_counter()
+                    self.stats.ttfts.append(seq.time_to_first_token)
+                    seq.tokens.append(first)
+                    self.stats.tokens_out += 1
+                if self.tracer is not None:
+                    self.tracer.emit("ttft", self._trace_track, tid=seq.sid,
+                                     ttft_s=seq.time_to_first_token)
+                if self.metrics is not None:
+                    self.metrics.histogram(
+                        "serving_ttft_seconds", tenant=seq.tenant,
+                    ).observe(seq.time_to_first_token)
+                    self.metrics.counter("serving_tokens_total",
+                                         tenant=seq.tenant).inc()
+                handle._push([first])
+                if len(seq.tokens) >= seq.params.max_new_tokens:
+                    with self._lock:
+                        self._settle(seq, SequenceStatus.FINISHED)
+                else:
+                    seq.status = SequenceStatus.READY
+                    with self._lock:
+                        self._ready.append((seq, handle))
 
     # -- decode rounds ---------------------------------------------------
     def _decode_round(self):
         cfg = self.cfg
         tr = self.tracer
-        S, R, D = cfg.max_slots, cfg.round_tokens, cfg.d_model
+        S, R = cfg.max_slots, cfg.round_tokens
         inserted = []
         with self._lock:
             for i in range(S):
                 if self._slots[i] is None and self._ready:
+                    # LM-side admission gate (the attention LM defers a
+                    # sequence the KV pool cannot page in yet; FIFO — no
+                    # head-of-line skipping, deferral is loud in kv stats)
+                    if not self.lm.can_admit(self._ready[0][0]):
+                        break
                     seq, handle = self._ready.popleft()
                     seq.status = SequenceStatus.DECODING
                     seq.slot = i
@@ -372,34 +514,12 @@ class ServingEngine:
         if not occupied:
             return
 
-        slots_tbl = np.zeros((S, SLOTS_W), np.int32)
-        for i, (seq, _) in occupied:
-            slots_tbl[i, COL_ACTIVE] = 1
-            slots_tbl[i, COL_N_EMIT] = min(
-                R, seq.params.max_new_tokens - len(seq.tokens))
-            slots_tbl[i, COL_LAST_TOK] = seq.tokens[-1]
-
-        # state composition: start from last round's device-resident state
-        # when we have one (rows of evicted slots are stale but inactive),
-        # else a fresh zero block; splice prefilled state into new slots.
-        if self._round_state is not None:
-            state = self._round_state
-            device_resident = not inserted
-        else:
-            state = jnp.zeros((S, D), jnp.int32)
-            device_resident = False
-        for i in inserted:
-            seq = self._slots[i][0]
-            state = state.at[i, :].set(self._state.pop(seq.sid)[0])
-
-        from repro.controller.kernels import get_kernel
-
-        kd = get_kernel("SeqDecode")
-        out = np.zeros((S, R), np.int32)
+        n_emit = {i: min(R, seq.params.max_new_tokens - len(seq.tokens))
+                  for i, (seq, _h) in occupied}
+        kernel, bundle, device_resident = self.lm.decode_bundle(
+            [(i, seq) for i, (seq, _h) in occupied], inserted, n_emit)
         task = Task(
-            kernel="SeqDecode",
-            args=kd.bundle(out, state, slots_tbl, S=S, D=D, R=R,
-                           vocab=cfg.vocab_size),
+            kernel=kernel, args=bundle,
             priority=cfg.decode_priority, phase="decode",
             sequence=tuple(seq.sid for _, (seq, _h) in occupied),
             region_pin=(frozenset(cfg.decode_regions)
@@ -417,18 +537,18 @@ class ServingEngine:
                     self._slots[i] = None
                     self._evict_trace(i, seq.sid)
                     self._settle(seq, SequenceStatus.FAILED, exc)
-                self._round_state = None
+                self.lm.fail_round()
                 self.stats.decode_rounds += 1
             if tr is not None:
                 tr.emit_span("decode_round", self._trace_track, t_round0,
                              n_slots=len(occupied), failed=True)
             return
+        out_np = self.lm.finish_round(bufs)
         if tr is not None:
             tr.emit_span("decode_round", self._trace_track, t_round0,
-                         n_slots=len(occupied), inserted=len(inserted))
+                         n_slots=len(occupied), inserted=len(inserted),
+                         **self.lm.trace_attrs())
 
-        out_np = np.asarray(bufs[0])
-        self._round_state = bufs[1]   # device-resident into the next round
         # cluster migration resumes a *clone*; the handle tracks the final
         # incarnation whose counters include every hop
         final = getattr(th, "task", None) or task
@@ -441,7 +561,7 @@ class ServingEngine:
         if self.metrics is not None:
             self.metrics.counter("serving_decode_rounds_total").inc()
         for i, (seq, handle) in occupied:
-            n = int(slots_tbl[i, COL_N_EMIT])
+            n = n_emit[i]
             toks = [int(t) for t in out_np[i, :n]]
             seq.tokens.extend(toks)
             with self._lock:
@@ -511,7 +631,7 @@ class ServingEngine:
             self.stats.n_cancelled += 1
         elif status is SequenceStatus.FAILED:
             self.stats.n_failed += 1
-        self._state.pop(seq.sid, None)
+        self.lm.drop(seq.sid)
         if handle is not None:
             if exc is not None:
                 handle._fail(exc)
@@ -524,8 +644,9 @@ class ServingEngine:
                 while q:
                     seq, _ = q.popleft()
                     self._settle(seq, SequenceStatus.FAILED, exc)
-            for seq, _h, _th in self._prefills:
-                self._settle(seq, SequenceStatus.FAILED, exc)
+            for seqs, _h, _th in self._prefills:
+                for seq in seqs:
+                    self._settle(seq, SequenceStatus.FAILED, exc)
             self._prefills.clear()
             for i, s in enumerate(self._slots):
                 if s is not None:
@@ -584,6 +705,8 @@ class ServingEngine:
                 "state_device_rounds": st.state_device_rounds,
                 "engine_mode": getattr(getattr(self.backend, "shell", None),
                                        "engine_mode", None),
+                "lm": self.lm.name,
+                "kv": self.lm.kv_stats(),
                 "trace": trace_section(self.tracer),
                 "telemetry": telemetry_section(self.metrics),
             })

@@ -1,0 +1,203 @@
+"""Paged-KV attention kernels (DESIGN.md §13): block-table gather vs the
+contiguous caches, Pallas-vs-ref parity through the paged path, per-batch
+positions, chunked-prefill ``q_offset``, row independence (the property
+the serving engine's bit-identity rests on), and the backend-auto Pallas
+mode selection."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import (decode_attention,
+                                                gather_kv_pages,
+                                                paged_decode_attention)
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.pallas_support import pallas_mode, resolve_interpret
+
+KEY = jax.random.key(11)
+
+
+def _paged_fixture(B=3, KV=2, hd=16, BS=8, T_blk=4, NB=None, seed=0):
+    """A shared pool + per-row tables, plus the dense caches a contiguous
+    allocator would have produced for the same rows (table order)."""
+    rng = np.random.default_rng(seed)
+    NB = NB if NB is not None else 1 + B * T_blk
+    k_pool = rng.standard_normal((NB, BS, KV, hd)).astype(np.float32)
+    v_pool = rng.standard_normal((NB, BS, KV, hd)).astype(np.float32)
+    # every row gets T_blk distinct non-null pages, deliberately shuffled
+    # so physical order != logical order
+    ids = rng.permutation(np.arange(1, NB))[:B * T_blk]
+    tables = ids.reshape(B, T_blk).astype(np.int32)
+    L = T_blk * BS
+
+    def dense(pool):
+        # [B, KV, L, hd]: row pages laid out contiguously in table order
+        return (pool[tables].reshape(B, L, KV, hd).transpose(0, 2, 1, 3))
+
+    return (jnp.asarray(k_pool), jnp.asarray(v_pool), jnp.asarray(tables),
+            jnp.asarray(dense(k_pool)), jnp.asarray(dense(v_pool)))
+
+
+# -- paged vs contiguous ----------------------------------------------------
+def test_gather_matches_contiguous_layout():
+    k_pool, v_pool, tables, k_dense, v_dense = _paged_fixture()
+    np.testing.assert_array_equal(np.asarray(gather_kv_pages(k_pool, tables)),
+                                  np.asarray(k_dense))
+    np.testing.assert_array_equal(np.asarray(gather_kv_pages(v_pool, tables)),
+                                  np.asarray(v_dense))
+
+
+@pytest.mark.parametrize("pos", [(1, 9, 25), (32, 32, 32), (0, 5, 31)])
+def test_paged_bitwise_equals_contiguous(pos):
+    """The serving guarantee: attention over a block table is BIT-identical
+    to attention over the dense cache the same tokens would occupy."""
+    B, H = 3, 4
+    k_pool, v_pool, tables, k_dense, v_dense = _paged_fixture(B=B)
+    q = jax.random.normal(KEY, (B, H, 1, 16))
+    p = jnp.asarray(pos, jnp.int32)
+    o_paged = paged_decode_attention(q, k_pool, v_pool, tables, p)
+    o_dense = decode_attention(q, k_dense, v_dense, p)
+    np.testing.assert_array_equal(np.asarray(o_paged), np.asarray(o_dense))
+
+
+def test_paged_matches_ref_oracle():
+    """Pallas (through the paged gather) vs the pure-jnp ref."""
+    B, H = 3, 4
+    k_pool, v_pool, tables, k_dense, v_dense = _paged_fixture(B=B, seed=3)
+    q = jax.random.normal(jax.random.fold_in(KEY, 1), (B, H, 1, 16))
+    pos = [7, 19, 32]
+    o = paged_decode_attention(q, k_pool, v_pool, tables,
+                               jnp.asarray(pos, jnp.int32))
+    o_ref = jnp.concatenate([
+        decode_attention_ref(q[b:b + 1], k_dense[b:b + 1],
+                             v_dense[b:b + 1], p)
+        for b, p in enumerate(pos)])
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_per_batch_positions_match_scalar_calls():
+    """i32[B] positions == one scalar-pos call per row."""
+    B, H = 3, 4
+    _, _, _, k_dense, v_dense = _paged_fixture(B=B, seed=5)
+    q = jax.random.normal(jax.random.fold_in(KEY, 2), (B, H, 1, 16))
+    pos = [3, 17, 30]
+    o_vec = decode_attention(q, k_dense, v_dense,
+                             jnp.asarray(pos, jnp.int32))
+    for b, p in enumerate(pos):
+        o_b = decode_attention(q[b:b + 1], k_dense[b:b + 1],
+                               v_dense[b:b + 1], p)
+        np.testing.assert_allclose(np.asarray(o_vec[b]), np.asarray(o_b[0]),
+                                   atol=1e-6, rtol=1e-6)
+
+
+def test_row_independence_under_batch_composition():
+    """Row b's output depends only on row b's query/table — the other
+    rows (even garbage tables pointing at the null page) cannot perturb
+    it.  This is the property that makes engine scheduling invisible to
+    a stream."""
+    B, H = 3, 4
+    k_pool, v_pool, tables, _, _ = _paged_fixture(B=B, seed=7)
+    q = jax.random.normal(jax.random.fold_in(KEY, 3), (B, H, 1, 16))
+    p = jnp.asarray([9, 21, 30], jnp.int32)
+    full = np.asarray(paged_decode_attention(q, k_pool, v_pool, tables, p))
+    # rewrite rows 1..2 to dead slots: null-page tables, pos 0
+    dead_tables = tables.at[1:].set(0)
+    dead_p = p.at[1:].set(0)
+    mixed = np.asarray(
+        paged_decode_attention(q, k_pool, v_pool, dead_tables, dead_p))
+    np.testing.assert_array_equal(mixed[0], full[0])
+
+
+# -- chunked prefill: q_offset ----------------------------------------------
+@pytest.mark.parametrize("C,off", [(8, 0), (8, 8), (8, 24), (16, 16)])
+def test_flash_q_offset_matches_full_causal(C, off):
+    """Chunked prefill runs flash over a C-query slice at absolute offset
+    ``off``; the rows must match the same rows of one full causal pass."""
+    B, H, KV, S, hd = 2, 4, 2, 32, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd))
+    k = jax.random.normal(ks[1], (B, KV, S, hd))
+    v = jax.random.normal(ks[2], (B, KV, S, hd))
+    full = attention_ref(q, k, v, causal=True)
+    chunk = flash_attention(q[:, :, off:off + C], k, v, causal=True,
+                            bq=C, bk=32, q_offset=jnp.asarray([off]))
+    np.testing.assert_allclose(np.asarray(chunk),
+                               np.asarray(full[:, :, off:off + C]),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_q_offset_is_traced_not_compiled():
+    """q_offset rides as a device scalar: two offsets must reuse one
+    compiled program (the serving prefill replays segments through a
+    single bitstream)."""
+    B, H, KV, S, hd = 1, 2, 2, 16, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd))
+    k = jax.random.normal(ks[1], (B, KV, S, hd))
+    v = jax.random.normal(ks[2], (B, KV, S, hd))
+    f = lambda off: flash_attention(q[:, :, off:off + 8], k, v, causal=True,
+                                    bq=8, bk=16, q_offset=jnp.asarray([off]))
+    o0 = f(0)
+    o8 = f(8)
+    full = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o0), np.asarray(full[:, :, :8]),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(o8), np.asarray(full[:, :, 8:16]),
+                               atol=2e-5, rtol=2e-5)
+
+
+# -- backend-auto Pallas mode -----------------------------------------------
+def test_resolve_interpret_backend_auto():
+    """Explicit choices pass through; None resolves from the backend —
+    interpret on CPU, compiled on tpu/gpu."""
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+    auto = resolve_interpret(None)
+    on_cpu = jax.default_backend() == "cpu"
+    assert auto is on_cpu
+    assert pallas_mode() == ("interpret" if auto else "compiled")
+
+
+def test_region_stats_record_pallas_mode():
+    """Running a Pallas-marked kernel through a region stamps the mode
+    the bitstream was built in (satellite: auto-select visibility)."""
+    from repro.core.shell import Shell
+    from repro.core.task import Task, TaskStatus
+    from repro.controller.kernels import get_kernel
+    from repro.serving.attention import (AttentionParams, build_weights,
+                                         register_attention_kernels)
+
+    p = AttentionParams()
+    prefill_name, _ = register_attention_kernels(p)
+    kd = get_kernel(prefill_name)
+    assert kd.pallas
+    PB, P, KV, hd = 1, p.max_ctx, p.kv_heads, p.head_dim
+    out = np.zeros((PB, 8), np.int32)
+    k_new = np.zeros((PB, P, KV, hd), np.float32)
+    v_new = np.zeros((PB, P, KV, hd), np.float32)
+    prompt = np.zeros((PB, P), np.int32)
+    prompt[0, :3] = [1, 2, 3]
+    meta = np.zeros((PB, 8), np.int32)
+    meta[0, 0] = 3
+    task = Task(kernel=prefill_name,
+                args=kd.bundle(out, k_new, v_new, prompt, meta,
+                               np.asarray(build_weights(p)),
+                               PB=PB, P=P, vocab=p.vocab))
+    shell = Shell(n_regions=1, chunk_budget=4, prefetch=False)
+    try:
+        r = shell.regions[0]
+        r.enqueue_reconfig(task)
+        r.enqueue_launch(task)
+        deadline = 60.0
+        import time
+        t0 = time.perf_counter()
+        while task.status is not TaskStatus.DONE:
+            assert time.perf_counter() - t0 < deadline
+            shell.interrupts.wait(0.001)
+        rep = shell.reconfig_report()
+        assert rep["regions"][r.rid]["pallas_mode"] == pallas_mode()
+    finally:
+        shell.shutdown()

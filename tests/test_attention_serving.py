@@ -1,0 +1,340 @@
+"""Attention-LM serving (DESIGN.md §13): paged-KV decode rounds over the
+region fabric.  Streams must be bit-identical to the standalone oracle
+under continuous batching, forced checkpoint-preemption at every chunk
+boundary, same-region and cross-region resume, and cross-shell
+migration — the KV pages ride the commit/spill/CRC machinery like any
+other context payload.  Plus the pool-accounting satellites: admission
+deferral under a starved pool, eviction/reuse counters, and the packed
+multi-sequence prefill."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.controller.kernels import get_kernel
+from repro.core.interrupts import EventKind
+from repro.core.scheduler import Scheduler, SchedulerConfig
+from repro.core.shell import Shell
+from repro.core.task import Task, TaskStatus
+from repro.serving.attention import (COL_SEQ_LEN, TABLE_META, AttentionParams,
+                                     attention_oracle_stream, build_weights,
+                                     register_attention_kernels)
+from repro.serving.engine import ServingConfig, ServingEngine
+from repro.serving.kernels import COL_ACTIVE, COL_LAST_TOK, COL_N_EMIT
+from repro.serving.sequence import SamplingParams, SequenceStatus
+
+P = AttentionParams()
+VOCAB = P.vocab
+
+
+# ------------------------------------------------------------ direct drive
+def _decode_task(seed=0, S=3, R=6, live=2):
+    """A standalone paged-decode round over a synthetic pool/table —
+    preemption bit-identity does not depend on how the pages were
+    written.  ``live`` rows are active; the rest exercise the null-page
+    masking."""
+    rng = np.random.default_rng(seed)
+    _, dec_name = register_attention_kernels(P)
+    kd = get_kernel(dec_name)
+    NB = S * P.blocks_per_seq + 1
+    shape = (NB, P.block_size, P.kv_heads, P.head_dim)
+    k_pool = rng.standard_normal(shape).astype(np.float32)
+    v_pool = rng.standard_normal(shape).astype(np.float32)
+    k_pool[0] = v_pool[0] = 0.0  # the reserved null page
+    table = np.zeros((S, P.table_width), np.int32)
+    for s in range(live):
+        pos = int(rng.integers(4, 20))
+        table[s, COL_ACTIVE] = 1
+        table[s, COL_N_EMIT] = R
+        table[s, COL_LAST_TOK] = int(rng.integers(0, VOCAB))
+        table[s, COL_SEQ_LEN] = pos
+        n_blk = -(-(pos + R) // P.block_size)
+        table[s, TABLE_META:TABLE_META + n_blk] = (
+            1 + s * P.blocks_per_seq + np.arange(n_blk))
+    out = np.zeros((S, R), np.int32)
+    return Task(kernel=dec_name,
+                args=kd.bundle(out, k_pool, v_pool, table,
+                               np.asarray(build_weights(P)),
+                               S=S, R=R, vocab=VOCAB),
+                priority=2)
+
+
+def _drive(shell, task, preempt_at=None, resume_region=None, timeout=120.0):
+    """Run a decode task on region 0, optionally checkpoint-preempting
+    after ``preempt_at`` chunk boundaries and resuming on
+    ``resume_region`` (None = same region)."""
+    regions = shell.regions
+    target = regions[0]
+    base = sum(r.stats.chunks for r in regions)
+    target.enqueue_reconfig(task)
+    target.enqueue_launch(task)
+    armed = preempt_at is not None
+    preemptions = 0
+    total = lambda: sum(r.stats.chunks for r in regions) - base
+    deadline = time.perf_counter() + timeout
+    while True:
+        assert time.perf_counter() < deadline, f"stuck: {task}"
+        ev = shell.interrupts.wait(0.0005)
+        if ev is not None and ev.kind is EventKind.TASK_DONE:
+            break
+        if ev is not None and ev.kind is EventKind.TASK_PREEMPTED:
+            preemptions += 1
+            target.cancel_preempt()
+            target = resume_region if resume_region is not None else target
+            target.enqueue_reconfig(task)
+            target.enqueue_launch(task)
+            continue
+        if armed and total() >= preempt_at:
+            armed = False
+            target.request_preempt()
+    for r in regions:
+        r.cancel_preempt()
+    return preemptions
+
+
+def _round_out(task):
+    """(tokens, k_pool, v_pool, table) as numpy — the bit-compared set."""
+    return tuple(np.asarray(b) for b in task.result[:4])
+
+
+def test_decode_round_bit_identical_under_preemption_matrix():
+    """Preempt at EVERY chunk boundary, resume same-region and
+    cross-region: tokens AND the KV pools must match the undisturbed
+    run bit-for-bit (pages ride commit/restore unchanged)."""
+    R = 6
+    shell = Shell(n_regions=2, chunk_budget=1, prefetch=False)
+    for r in shell.regions:
+        r.slowdown_s = 0.02  # stretch chunks so the preempt lands mid-round
+    try:
+        ref_task = _decode_task(seed=1, R=R)
+        _drive(shell, ref_task)
+        ref = _round_out(ref_task)
+        assert len(set(ref[0][0])) > 1  # stream is non-degenerate
+        total_preempts = 0
+        for boundary in range(1, R):
+            for cross in (False, True):
+                t = _decode_task(seed=1, R=R)
+                resume = shell.regions[1] if cross else None
+                # n can be 0 at late boundaries: the pipelined engine may
+                # already have the final done-chunk in flight when the
+                # preempt lands — completion then wins, legitimately
+                total_preempts += _drive(shell, t, preempt_at=boundary,
+                                         resume_region=resume)
+                got = _round_out(t)
+                for a, b in zip(got, ref):
+                    np.testing.assert_array_equal(a, b,
+                                                  err_msg=f"{boundary=} "
+                                                          f"{cross=}")
+        assert total_preempts >= R  # the matrix did exercise mid-round stops
+    finally:
+        shell.shutdown()
+
+
+def test_decode_round_survives_cross_shell_migration():
+    """Spill the mid-round KV pages to host (CRC-checked), carry them to
+    a different shell, finish there: bit-identical to never moving."""
+    from repro.cluster.frontend import ClusterFrontend
+
+    ref_shell = Shell(n_regions=1, chunk_budget=2, prefetch=False)
+    try:
+        ref_task = _decode_task(seed=2, R=6)
+        _drive(ref_shell, ref_task)
+        ref = _round_out(ref_task)
+    finally:
+        ref_shell.shutdown()
+
+    fe = ClusterFrontend(n_shells=2, regions_per_shell=1, chunk_budget=1,
+                         rebalance=False)
+    for node in fe.nodes:
+        for r in node.shell.regions:
+            r.slowdown_s = 0.02
+    try:
+        t = _decode_task(seed=2, R=6)
+        h = fe.submit(t)
+        deadline = time.perf_counter() + 30.0
+        migrated = False
+        while time.perf_counter() < deadline and not migrated:
+            if t.status is TaskStatus.RUNNING and fe.migrate(tid=t.tid):
+                migrated = True
+                break
+            time.sleep(0.002)
+        assert migrated, "forced migration never completed"
+        out = h.result(timeout=120.0)
+        assert h.n_migrations == 1
+        got = tuple(np.asarray(b) for b in out[:4])
+        for a, b in zip(got, ref):
+            np.testing.assert_array_equal(a, b)
+    finally:
+        rep = fe.shutdown()
+    assert rep["stranded_handles"] == 0 and rep["lost_tasks"] == 0
+
+
+# ---------------------------------------------------------- engine lifecycle
+@pytest.fixture
+def served_shell():
+    shell = Shell(n_regions=2, chunk_budget=2, prefetch=False)
+    sched = Scheduler(shell, SchedulerConfig())
+    th = threading.Thread(target=sched.run_forever, daemon=True)
+    th.start()
+    sched.wait_until_serving(timeout=10.0)
+    yield shell, sched
+    sched.drain(timeout=30.0)
+    shell.shutdown()
+
+
+def _cfg(**kw):
+    kw.setdefault("lm", "attention")
+    kw.setdefault("d_model", P.d_model)
+    kw.setdefault("vocab_size", P.vocab)
+    return ServingConfig(**kw)
+
+
+def _submit_batch(engine, rng, n, max_slots, round_tokens, prefill_batch=1,
+                  kv_blocks=None):
+    specs, handles = [], []
+    for i in range(n):
+        prompt = [int(x) for x in rng.integers(0, VOCAB, size=2 + i % 4)]
+        mx = 2 + 2 * (i % 3)
+        specs.append((prompt, mx))
+        handles.append(engine.submit(
+            prompt, SamplingParams(max_new_tokens=mx, seed=i)))
+    return specs, handles
+
+
+def _check(handles, specs, *, max_slots, round_tokens, prefill_batch=1,
+           kv_blocks=None):
+    for h, (prompt, mx) in zip(handles, specs):
+        got = h.result(timeout=240.0)
+        want = attention_oracle_stream(
+            prompt, mx, P, max_slots=max_slots, round_tokens=round_tokens,
+            prefill_batch=prefill_batch, kv_blocks=kv_blocks)
+        assert got == want, (prompt, mx, got, want)
+        assert h.status is SequenceStatus.FINISHED
+
+
+def test_attention_streams_match_oracle(served_shell):
+    """Continuous batching over real paged attention: every stream
+    bit-identical to the standalone oracle, KV accounting in the
+    report."""
+    shell, sched = served_shell
+    engine = ServingEngine(sched, _cfg(max_slots=2, round_tokens=3)).start()
+    rng = np.random.default_rng(2)
+    specs, handles = _submit_batch(engine, rng, 4, 2, 3)
+    _check(handles, specs, max_slots=2, round_tokens=3)
+    rep = engine.drain(timeout=60.0)
+    assert rep["lm"] == "attention"
+    assert rep["n_finished"] == 4 and rep["stranded_sequences"] == 0
+    kv = rep["kv"]
+    assert kv["blocks_in_use"] == 0          # everything released
+    assert kv["blocks_peak"] >= 1
+    assert kv["evictions"] >= 4              # one release per sequence
+    # default pool: max_slots full contexts, null page excluded from total
+    assert kv["blocks_total"] == 2 * P.blocks_per_seq
+    srep = shell.reconfig_report()
+    modes = {d["pallas_mode"] for d in srep["regions"].values()}
+    assert modes <= {"interpret", "compiled", None}
+    assert modes & {"interpret", "compiled"}
+
+
+def test_attention_packed_prefill_batches_sequences(served_shell):
+    """prefill_batch=2 packs waiting sequences into one prefill task
+    (satellite: batched/packed prefill) without perturbing streams."""
+    shell, sched = served_shell
+    engine = ServingEngine(sched, _cfg(
+        max_slots=4, round_tokens=4, prefill_batch=2)).start()
+    rng = np.random.default_rng(4)
+    specs, handles = _submit_batch(engine, rng, 4, 4, 4, prefill_batch=2)
+    _check(handles, specs, max_slots=4, round_tokens=4, prefill_batch=2)
+    rep = engine.drain(timeout=60.0)
+    assert rep["n_finished"] == 4
+    assert rep["prefill_tasks"] < 4          # at least one packed pair
+
+
+def test_attention_starved_pool_defers_admission(served_shell):
+    """A pool with pages for only one full sequence: admission waits for
+    blocks (alloc_deferred grows), streams still exact, nothing leaks."""
+    shell, sched = served_shell
+    kv_blocks = P.blocks_per_seq + 1
+    engine = ServingEngine(sched, _cfg(
+        max_slots=2, round_tokens=3, kv_blocks=kv_blocks)).start()
+    rng = np.random.default_rng(5)
+    # each sequence needs 30 + 8 - 1 = 37 positions = 5 of the 8 pages:
+    # two can never be resident at once, so admission must wait
+    specs, handles = [], []
+    for i in range(3):
+        prompt = [int(x) for x in rng.integers(0, VOCAB, size=30)]
+        specs.append((prompt, 8))
+        handles.append(engine.submit(
+            prompt, SamplingParams(max_new_tokens=8, seed=i)))
+    _check(handles, specs, max_slots=2, round_tokens=3, kv_blocks=kv_blocks)
+    rep = engine.drain(timeout=60.0)
+    assert rep["n_finished"] == 3 and rep["stranded_sequences"] == 0
+    kv = rep["kv"]
+    assert kv["blocks_in_use"] == 0
+    assert kv["alloc_deferred"] >= 1         # someone had to wait
+    assert kv["reuse"] >= 1                  # freed pages were recycled
+
+
+def test_attention_rejects_oversized_prompt(served_shell):
+    """prompt + max_new - 1 must fit max_ctx; beyond that the sequence
+    fails fast instead of wedging a slot."""
+    shell, sched = served_shell
+    engine = ServingEngine(sched, _cfg()).start()
+    bad = engine.submit(list(range(1, P.max_ctx + 2)),
+                        SamplingParams(max_new_tokens=4))
+    ok = engine.submit([3, 1, 4], SamplingParams(max_new_tokens=3))
+    assert ok.result(timeout=240.0) == attention_oracle_stream([3, 1, 4], 3, P)
+    with pytest.raises(Exception):
+        bad.result(timeout=60.0)
+    assert bad.status is SequenceStatus.FAILED
+    rep = engine.drain(timeout=60.0)
+    assert rep["n_failed"] == 1 and rep["stranded_sequences"] == 0
+
+
+def test_attention_engine_forced_preemption_streams_bit_identical():
+    """The preempt probe checkpoint-preempts live attention decode
+    rounds mid-flight; every stream must still match the oracle."""
+    shell = Shell(n_regions=2, chunk_budget=1, prefetch=False)
+    for r in shell.regions:
+        r.slowdown_s = 0.02
+    sched = Scheduler(shell, SchedulerConfig())
+    th = threading.Thread(target=sched.run_forever, daemon=True)
+    th.start()
+    sched.wait_until_serving(timeout=10.0)
+    engine = ServingEngine(sched, _cfg(
+        max_slots=3, round_tokens=4, preempt_probe_every=1,
+        decode_regions=(shell.regions[1].rid,))).start()
+    try:
+        rng = np.random.default_rng(3)
+        specs, handles = [], []
+        for i in range(3):
+            prompt = [int(x) for x in rng.integers(0, VOCAB, size=3)]
+            specs.append(prompt)
+            handles.append(engine.submit(
+                prompt, SamplingParams(max_new_tokens=8, seed=i)))
+        for h, prompt in zip(handles, specs):
+            assert h.result(timeout=300.0) == attention_oracle_stream(
+                prompt, 8, P, max_slots=3, round_tokens=4)
+        rep = engine.drain(timeout=60.0)
+        assert rep["decode_preemptions"] >= 1
+        assert rep["stranded_sequences"] == 0
+        assert rep["kv"]["blocks_in_use"] == 0
+    finally:
+        sched.drain(timeout=30.0)
+        shell.shutdown()
+
+
+def test_oracle_invariant_to_schedule_shape():
+    """The oracle itself: the stream must not depend on round size,
+    chunk budget, batch width, or pool size — only on the prompt."""
+    base = attention_oracle_stream([9, 2, 7], 7, P)
+    assert len(set(base)) > 1
+    assert base == attention_oracle_stream([9, 2, 7], 7, P, round_tokens=2)
+    assert base == attention_oracle_stream([9, 2, 7], 7, P, chunk_budget=1)
+    assert base == attention_oracle_stream([9, 2, 7], 7, P, max_slots=2)
+    assert base == attention_oracle_stream([9, 2, 7], 7, P, prefill_batch=2)
+    assert base == attention_oracle_stream([9, 2, 7], 7, P,
+                                           kv_blocks=P.blocks_per_seq + 1)
+    # prefix property: a shorter generation is a prefix of a longer one
+    assert attention_oracle_stream([9, 2, 7], 4, P) == base[:4]
